@@ -1,0 +1,55 @@
+"""Paper §9 evaluation-plan metrics: average/tail latency, promotion &
+prefix-reuse rate, wasted speculative compute, authoritative QoS
+violations, and co-run slowdown across interference regimes (roomy /
+thor / tight machines × concurrency)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.events import ResourceVector
+from repro.core.interference import Machine
+from repro.core.patterns import PatternEngine
+from repro.core.runtime import run_mode
+from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episodes
+
+REGIMES = [
+    ("roomy", Machine(ResourceVector(cpu=12, mem_bw=100, io=500, accel=1)), 1),
+    ("thor", Machine(ResourceVector(cpu=6, mem_bw=50, io=200, accel=1)), 1),
+    ("thor_multi", Machine(ResourceVector(cpu=6, mem_bw=50, io=200, accel=1)), 3),
+    ("tight", Machine(ResourceVector(cpu=3, mem_bw=20, io=80, accel=1)), 3),
+]
+
+
+def run(n_test: int = 12) -> List[Dict]:
+    train_eps = make_episodes(WorkloadConfig(seed=1, n_episodes=60))
+    engine = PatternEngine(context_len=2, min_support=3).fit(
+        episodes_to_traces(train_eps))
+    test_eps = make_episodes(WorkloadConfig(seed=42, n_episodes=n_test))
+    rows = []
+    for regime, machine, conc in REGIMES:
+        base = None
+        for mode in ("serial", "bpaste", "parallel"):
+            t0 = time.perf_counter()
+            m = run_mode(test_eps, engine, mode, machine, seed=7,
+                         max_concurrent_episodes=conc)
+            wall = time.perf_counter() - t0
+            s = m.summary()
+            if mode == "serial":
+                base = s["makespan"]
+            n_steps = sum(len(e.steps) for e in test_eps)
+            rows.append({
+                "name": f"eval/{regime}/{mode}",
+                "us_per_call": wall * 1e6 / n_test,
+                "derived": (
+                    f"speedup={base/s['makespan']:.3f} "
+                    f"mean_lat={s['mean_latency']:.1f} p95={s['p95_latency']:.1f} "
+                    f"promo_rate={s['promotions']/n_steps:.2f} "
+                    f"prefix_rate={s['prefix_reuses']/n_steps:.2f} "
+                    f"waste={s['wasted_frac']:.2f} qos={s['qos_violations']} "
+                    f"slow={s['mean_auth_slowdown']:.3f}"
+                ),
+            })
+    return rows

@@ -1,0 +1,58 @@
+"""Kernel micro-timings (CPU wall time of the jnp implementations; the
+Pallas kernels target TPU and are validated in interpret mode — CPU wall
+time for interpret mode is not meaningful and is excluded)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+RNG = np.random.default_rng(0)
+
+
+def _time(fn, *args, n=5, **kw):
+    fn(*args, **kw)[0].block_until_ready() if isinstance(fn(*args, **kw), tuple) else None
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / n
+
+
+def run() -> List[Dict]:
+    rows = []
+    b, s, h, kv, d = 1, 1024, 8, 2, 64
+    q = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, d)), jnp.float32)
+    dt = _time(lambda: ops.flash_attention(q, k, v, impl="jnp"))
+    flops = 4 * b * h * s * s * d / 2  # causal
+    rows.append({"name": "kernels/flash_attention_1k", "us_per_call": dt * 1e6,
+                 "derived": f"gflops/s={flops/dt/1e9:.1f}"})
+
+    qd = jnp.asarray(RNG.normal(size=(8, h, d)), jnp.float32)
+    kc = jnp.asarray(RNG.normal(size=(8, 4096, kv, d)), jnp.float32)
+    vc = jnp.asarray(RNG.normal(size=(8, 4096, kv, d)), jnp.float32)
+    lens = jnp.full((8,), 4096, jnp.int32)
+    dt = _time(lambda: ops.decode_attention(qd, kc, vc, lens, impl="jnp"))
+    bytes_read = 2 * 8 * 4096 * kv * d * 4
+    rows.append({"name": "kernels/decode_attention_4k", "us_per_call": dt * 1e6,
+                 "derived": f"gb/s={bytes_read/dt/1e9:.1f}"})
+
+    bb, ss, hh, p, g, n = 1, 2048, 8, 64, 1, 64
+    x = jnp.asarray(RNG.normal(size=(bb, ss, hh, p)), jnp.float32)
+    dts = jnp.asarray(RNG.uniform(0.01, 0.2, size=(bb, ss, hh)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, size=(hh,)), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(bb, ss, g, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(bb, ss, g, n)), jnp.float32)
+    D = jnp.asarray(RNG.normal(size=(hh,)), jnp.float32)
+    dt = _time(lambda: ops.ssd_scan(x, dts, A, B, C, D, chunk=128, impl="jnp"))
+    rows.append({"name": "kernels/ssd_scan_2k", "us_per_call": dt * 1e6,
+                 "derived": f"tokens/s={bb*ss/dt:.0f}"})
+    return rows

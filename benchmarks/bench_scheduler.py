@@ -1,0 +1,85 @@
+"""Scheduler microbenchmarks: the runtime must not eat the slack it
+exploits.  Beam EU scoring (jit), greedy admission, greedy-vs-exact
+quality, PrefixSpan mining throughput."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import admission, scoring
+from repro.core.events import DEFAULT_TOOLS
+from repro.core.hypothesis import BranchHypothesis, HypothesisBuilder, Node, NodeKind
+from repro.core.interference import Machine
+from repro.core.mining.prefixspan import prefixspan
+from repro.core.patterns import PatternEngine
+from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episodes
+
+
+def _mk_hyp(hid, tools, q=0.8):
+    nodes, edges = [], []
+    for i, t in enumerate(tools):
+        spec = DEFAULT_TOOLS[t]
+        nodes.append(Node(i, NodeKind.TOOL, t, spec.level, spec.rho, spec.base_latency))
+        if i:
+            edges.append((i - 1, i))
+    return BranchHypothesis(hid, nodes, edges, q, context_key=("x",))
+
+
+def run() -> List[Dict]:
+    rows = []
+    sc = scoring.Scorer(Machine(), k_max=8, n_max=12)
+    hyps = [_mk_hyp(i, ["grep", "read", "parse", "search"][: 1 + i % 4], q=0.9 - 0.1 * i)
+            for i in range(8)]
+    adm = np.array([1.0, 5.0, 10.0, 1.0])
+    sc.score(hyps, adm)                      # warm the jit cache
+    n = 200
+    t0 = time.perf_counter()
+    for _ in range(n):
+        sc.score(hyps, adm)
+    dt = (time.perf_counter() - t0) / n
+    rows.append({"name": "scheduler/score_beam_k8", "us_per_call": dt * 1e6,
+                 "derived": "jit beam EU (K=8,N=12)"})
+
+    slack = np.array([6.0, 50.0, 200.0, 1.0])
+    budget = slack.copy()
+    t0 = time.perf_counter()
+    for _ in range(50):
+        res = admission.greedy_admit(hyps, sc, slack, budget, adm)
+    dt = (time.perf_counter() - t0) / 50
+    rows.append({"name": "scheduler/greedy_admit_k8", "us_per_call": dt * 1e6,
+                 "derived": f"admitted={len(res.admitted)}"})
+
+    g = sum(res.eu.values())
+    _, ex = admission.exact_admit(hyps[:6], sc, slack, budget, adm)
+    res6 = admission.greedy_admit(hyps[:6], sc, slack, budget, adm)
+    g6 = sum(res6.eu.values())
+    rows.append({"name": "scheduler/greedy_vs_exact_k6", "us_per_call": 0.0,
+                 "derived": f"quality_ratio={g6/max(ex,1e-9):.3f}"})
+
+    eps = make_episodes(WorkloadConfig(seed=1, n_episodes=60))
+    traces = episodes_to_traces(eps)
+    from repro.core.events import trace_signatures
+    seqs = [trace_signatures(t) for t in traces]
+    t0 = time.perf_counter()
+    pats = prefixspan(seqs, min_support=3, max_len=5, max_gap=1)
+    dt = time.perf_counter() - t0
+    rows.append({"name": "scheduler/prefixspan_60traces", "us_per_call": dt * 1e6,
+                 "derived": f"patterns={len(pats)}"})
+
+    t0 = time.perf_counter()
+    pe = PatternEngine(context_len=2, min_support=3).fit(traces)
+    dt = time.perf_counter() - t0
+    rows.append({"name": "scheduler/pattern_engine_fit", "us_per_call": dt * 1e6,
+                 "derived": f"tuples={len(pe.patterns)}"})
+
+    b = HypothesisBuilder(pe)
+    hist = traces[0][:2]
+    t0 = time.perf_counter()
+    for _ in range(100):
+        hs = b.build(hist, beam_width=6)
+    dt = (time.perf_counter() - t0) / 100
+    rows.append({"name": "scheduler/build_beam", "us_per_call": dt * 1e6,
+                 "derived": f"hyps={len(hs)}"})
+    return rows

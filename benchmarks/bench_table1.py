@@ -1,0 +1,42 @@
+"""Table 1 reproduction: normalized end-to-end latency / speedup on a
+Thor-class edge environment (serial baseline vs B-PASTE), plus the PASTE
+and naive-parallel baselines the paper positions against."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.events import ResourceVector
+from repro.core.interference import Machine
+from repro.core.patterns import PatternEngine
+from repro.core.runtime import run_mode
+from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episodes
+
+THOR = Machine(ResourceVector(cpu=6, mem_bw=50, io=200, accel=1))
+
+
+def run(n_train: int = 60, n_test: int = 12) -> List[Dict]:
+    train_eps = make_episodes(WorkloadConfig(seed=1, n_episodes=n_train))
+    engine = PatternEngine(context_len=2, min_support=3).fit(
+        episodes_to_traces(train_eps))
+    test_eps = make_episodes(WorkloadConfig(seed=42, n_episodes=n_test))
+    rows = []
+    base = None
+    for mode in ("serial", "paste", "bpaste", "parallel"):
+        t0 = time.perf_counter()
+        m = run_mode(test_eps, engine, mode, THOR, seed=7)
+        wall = time.perf_counter() - t0
+        s = m.summary()
+        if mode == "serial":
+            base = s["makespan"]
+        rows.append({
+            "name": f"table1/{mode}",
+            "us_per_call": wall * 1e6 / max(len(test_eps), 1),
+            "derived": (
+                f"norm_latency={s['makespan']/base:.3f} "
+                f"speedup={base/s['makespan']:.3f} "
+                f"promo={s['promotions']} reuse={s['reuses']} "
+                f"waste={s['wasted_frac']:.2f}"
+            ),
+        })
+    return rows

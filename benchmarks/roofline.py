@@ -1,0 +1,69 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Per (arch × shape × mesh): the three roofline terms in seconds, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS useful-compute ratio, and a one-line
+lever.  Writes markdown (for EXPERIMENTS.md §Roofline) and emits CSV rows
+for benchmarks.run."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+LEVERS = {
+    "compute": "raise arithmetic efficiency: fused kernels / lower remat recompute",
+    "memory": "cut HBM traffic: KV/cache layout, quantized cache, larger per-step batch",
+    "collective": "reshard to cut all-reduce bytes: 2D TP, comm/compute overlap, bf16 collectives",
+}
+
+
+def load(results_dir: str = "results/dryrun") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def markdown_table(recs: List[Dict], mesh: str = "single") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_term_s']:.4g} | "
+            f"{r['memory_term_s']:.4g} | {r['collective_term_s']:.4g} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def run() -> List[Dict]:
+    recs = load()
+    rows = []
+    for r in recs:
+        if r["mesh"] != "single":
+            continue
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}",
+            "us_per_call": max(r["compute_term_s"], r["memory_term_s"],
+                               r["collective_term_s"]) * 1e6,
+            "derived": (
+                f"bottleneck={r['bottleneck']} "
+                f"c={r['compute_term_s']:.3g} m={r['memory_term_s']:.3g} "
+                f"x={r['collective_term_s']:.3g} useful={r['useful_flops_ratio']:.2f}"
+            ),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load()
+    print(markdown_table(recs, "single"))

@@ -1,0 +1,33 @@
+"""Benchmark entrypoint: one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_ablation, bench_eval_plan, bench_kernels,
+                            bench_scheduler, bench_serving, bench_table1,
+                            roofline)
+
+    sections = [
+        ("table1 (paper Table 1: end-to-end speedup)", bench_table1.run),
+        ("eval_plan (paper SS9 metrics)", bench_eval_plan.run),
+        ("ablation (EU objective / beam width)", bench_ablation.run),
+        ("scheduler (runtime overhead)", bench_scheduler.run),
+        ("serving (B-PASTE x engine integration)", bench_serving.run),
+        ("kernels", bench_kernels.run),
+        ("roofline (dry-run derived)", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    for title, fn in sections:
+        print(f"# --- {title} ---", file=sys.stderr)
+        try:
+            for row in fn():
+                print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+        except Exception as e:  # keep the harness robust
+            print(f"{title},0,\"ERROR: {type(e).__name__}: {e}\"")
+
+
+if __name__ == "__main__":
+    main()

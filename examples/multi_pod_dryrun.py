@@ -1,0 +1,25 @@
+"""Lower + compile one (arch x shape) cell on the 512-chip multi-pod mesh
+and print its roofline terms.
+
+  PYTHONPATH=src python examples/multi_pod_dryrun.py --arch mixtral-8x7b --shape train_4k
+"""
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="multi", choices=["single", "multi"])
+    args = ap.parse_args()
+    # NOTE: repro.launch.dryrun sets XLA_FLAGS for 512 host devices at import
+    from repro.launch.dryrun import run_cell
+    rec = run_cell(args.arch, args.shape, args.mesh, out_dir=None)
+    keys = ("status", "devices", "compile_s", "compute_term_s", "memory_term_s",
+            "collective_term_s", "bottleneck", "useful_flops_ratio")
+    print(json.dumps({k: rec.get(k) for k in keys}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end driver: a real (reduced-config) LLM served with batched
+requests on the ServingEngine, with B-PASTE batch-slot speculation.
+
+The agent loop decodes reasoning tokens on the engine; tool calls run on
+the host.  During each tool call, B-PASTE prefs the predicted observation
+into a free slot so the follow-up reasoning is already decoding when the
+tool returns (promotion = zero-copy slot re-tag).
+
+  PYTHONPATH=src python examples/speculative_serving.py --arch qwen2-7b
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core.hypothesis import HypothesisBuilder
+from repro.core.patterns import PatternEngine
+from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episodes
+from repro.models import model as model_mod
+from repro.serving.engine import ServingEngine
+from repro.serving.spec_serving import SlotSpeculator, render_observation
+
+
+def serve(spec_on: bool, cfg, params, episodes, pattern_engine, reason_tokens=5):
+    eng = ServingEngine(cfg, params, max_batch=4, max_len=192)
+    spec = SlotSpeculator(eng, budget_slots=2)
+    builder = HypothesisBuilder(pattern_engine)
+    decode_steps = 0
+    hits = 0
+    t0 = time.time()
+    for ep in episodes:
+        history = []
+        prompt = [2, 3, 4]
+        slot = eng.add_request(prompt, request_id=ep.eid)
+        for step in ep.steps[:4]:
+            # reasoning: decode a few tokens on the authoritative slot
+            for _ in range(reason_tokens):
+                eng.step()
+                decode_steps += 1
+            # while the tool "runs", speculate likely continuations
+            if spec_on and history:
+                hyps = builder.build(history, beam_width=3)
+                spec.admit([(h, h.q) for h in hyps], history_prompt=prompt)
+                for _ in range(3):          # tool latency window
+                    eng.step()
+                    decode_steps += 1
+            obs = render_observation(step.tool, {}, f"pred:{step.tool}", cfg.vocab_size)
+            got = spec.match_and_promote(obs, ep.eid) if spec_on else None
+            if got is not None:
+                hits += 1
+            from repro.core.events import Event
+            history.append(Event("tool", step.tool, dict(step.args), {"ok": True}))
+        spec.squash_all()
+        for s in eng.slots:
+            s.active = False
+            s.request_id = None
+    return time.time() - t0, decode_steps, hits, spec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--episodes", type=int, default=3)
+    args = ap.parse_args()
+    cfg = get_config(args.arch).reduced()
+    params = model_mod.init_params(jax.random.key(0), cfg)
+    history = make_episodes(WorkloadConfig(seed=1, n_episodes=40))
+    pe = PatternEngine(context_len=2, min_support=3).fit(episodes_to_traces(history))
+    episodes = make_episodes(WorkloadConfig(seed=9, n_episodes=args.episodes))
+
+    dt0, steps0, _, _ = serve(False, cfg, params, episodes, pe)
+    dt1, steps1, hits, spec = serve(True, cfg, params, episodes, pe)
+    print(f"baseline : {steps0} decode steps in {dt0:.1f}s")
+    print(f"B-PASTE  : {steps1} decode steps in {dt1:.1f}s "
+          f"(speculative slots admitted={spec.admitted}, promoted={spec.promotions}, "
+          f"preempted={spec.preemptions})")
+    print("promoted slots had their follow-up reasoning already decoded -> "
+          "the tool-return -> next-action latency is hidden")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Sharded checkpointing: npz shards + JSON manifest, atomic commit, async
+writer, elastic restore (reshard onto a different mesh on load).
+
+Layout:
+  <dir>/step_<N>.tmp/            (written)
+  <dir>/step_<N>/                (atomic rename = commit)
+    manifest.json                {step, keys, shapes, dtypes, tree hash}
+    arrays.npz                   one entry per flattened leaf
+
+Fault-tolerance contract: a crash mid-write leaves only a .tmp directory;
+`latest_step` ignores it, so restart resumes from the last COMMITTED step.
+Restore takes a (possibly different) mesh + sharding spec tree and
+device_puts each leaf with its new sharding — elastic re-mesh after node
+loss is a restore onto the survivor mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy cannot persist ml_dtypes (bfloat16 etc.) natively: store as a raw
+# uint view and round-trip through the manifest's dtype record.
+_VIEW_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                "float8_e5m2": np.uint8}
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name in _VIEW_DTYPES:
+            arr = arr.view(_VIEW_DTYPES[arr.dtype.name])
+        flat[key] = arr
+    return flat
+
+
+def save(tree, directory: str, step: int, *, extra: Optional[Dict] = None) -> str:
+    """Synchronous atomic save.  Returns the committed path."""
+    tmp = os.path.join(directory, f"step_{step}.tmp")
+    final = os.path.join(directory, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    logical_dtypes = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        logical_dtypes[key] = str(np.asarray(leaf).dtype)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat.keys()),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": logical_dtypes,
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)            # atomic commit
+    return final
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint IO with compute: `save` returns immediately after
+    snapshotting to host memory; the writer thread persists in background.
+    `wait()` joins the in-flight write (call before exit / next save)."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        self._thread: Optional[threading.Thread] = None
+        self.last_committed: Optional[str] = None
+
+    def save(self, tree, step: int, *, extra=None):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # device -> host snapshot
+
+        def _write():
+            self.last_committed = save(host_tree, self.directory, step, extra=extra)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(
+    directory: str, step: int, like_tree, *,
+    mesh=None, spec_tree=None,
+) -> Any:
+    """Load a checkpoint into the structure of `like_tree`.
+
+    With (mesh, spec_tree) the leaves are device_put with NamedShardings —
+    restoring onto a DIFFERENT mesh than the one that saved is how elastic
+    re-meshing after node failure works."""
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        flat = {k: data[k] for k in data.files}
+    for k, dt in manifest["dtypes"].items():
+        if dt in _VIEW_DTYPES:
+            flat[k] = flat[k].view(getattr(ml_dtypes, dt))
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    new_leaves = []
+    specs_flat = None
+    if spec_tree is not None:
+        from jax.sharding import PartitionSpec as P
+        specs_flat = [
+            s for _, s in jax.tree_util.tree_flatten_with_path(
+                spec_tree, is_leaf=lambda x: isinstance(x, P))[0]
+        ]
+    for i, (pth, leaf) in enumerate(leaves_paths):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+        arr = flat[key].astype(leaf.dtype)
+        if mesh is not None and specs_flat is not None:
+            from jax.sharding import NamedSharding
+            arr = jax.device_put(arr, NamedSharding(mesh, specs_flat[i]))
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

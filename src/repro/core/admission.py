@@ -1,0 +1,106 @@
+"""Admission control (paper Eq. 5–6): pick A* ⊆ beam maximizing Σ EU(H|A)
+subject to Σρ ≤ min(R_slack, B).
+
+Primary policy is the paper's greedy (Algorithm 1 line 20): repeatedly admit
+the highest-marginal-EU prefix that still fits, re-scoring interference
+after each admission (EU is conditioned on the admitted set, so marginals
+change).  ``exact_admit`` enumerates all subsets (K ≤ ~14) and is used by
+tests to bound the greedy gap and by the benchmark to report solution
+quality.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.events import RESOURCE_DIMS
+from repro.core.hypothesis import BranchHypothesis
+from repro.core.interference import Machine
+from repro.core.scoring import Scorer
+
+
+def _prefix_rho(h: BranchHypothesis) -> np.ndarray:
+    agg = np.zeros(RESOURCE_DIMS)
+    for n in h.safe_prefix():
+        agg = np.maximum(agg, n.rho.as_array())
+    return agg
+
+
+@dataclass
+class AdmissionResult:
+    admitted: List[BranchHypothesis]
+    eu: dict                     # hid -> EU at admission time
+    rejected: List[BranchHypothesis]
+
+
+def greedy_admit(
+    hyps: Sequence[BranchHypothesis],
+    scorer: Scorer,
+    slack: np.ndarray,           # R_slack (R,)
+    budget: np.ndarray,          # B (R,)
+    authoritative_rho: np.ndarray,
+    idle_window: float = 10.0,
+) -> AdmissionResult:
+    limit = np.minimum(slack, budget)
+    admitted: List[BranchHypothesis] = []
+    admitted_demand = np.zeros(RESOURCE_DIMS)
+    eu_at_admit: dict = {}
+    remaining = list(hyps)
+    while remaining:
+        eu, pb, _ = scorer.score(
+            remaining, authoritative_rho + admitted_demand, idle_window
+        )
+        order = np.argsort(-eu[: len(remaining)])
+        picked = None
+        for oi in order:
+            if eu[oi] <= 0:
+                break
+            cand = remaining[oi]
+            rho = _prefix_rho(cand)
+            if np.all(admitted_demand + rho <= limit + 1e-9):
+                picked = (oi, cand, float(eu[oi]), rho)
+                break
+        if picked is None:
+            break
+        oi, cand, val, rho = picked
+        admitted.append(cand)
+        eu_at_admit[cand.hid] = val
+        admitted_demand = admitted_demand + rho
+        remaining.pop(oi)
+    return AdmissionResult(admitted, eu_at_admit, remaining)
+
+
+def exact_admit(
+    hyps: Sequence[BranchHypothesis],
+    scorer: Scorer,
+    slack: np.ndarray,
+    budget: np.ndarray,
+    authoritative_rho: np.ndarray,
+    idle_window: float = 10.0,
+) -> Tuple[List[BranchHypothesis], float]:
+    """Brute-force Eq. 5 (for tests / quality reporting).  O(2^K)."""
+    limit = np.minimum(slack, budget)
+    best: Tuple[float, Tuple[int, ...]] = (0.0, ())
+    n = len(hyps)
+    rhos = [_prefix_rho(h) for h in hyps]
+    for r in range(1, n + 1):
+        for subset in itertools.combinations(range(n), r):
+            demand = np.sum([rhos[i] for i in subset], axis=0)
+            if not np.all(demand <= limit + 1e-9):
+                continue
+            # EU of each member conditioned on the OTHERS in the subset
+            total = 0.0
+            for i in subset:
+                others = np.sum(
+                    [rhos[j] for j in subset if j != i], axis=0,
+                ) if r > 1 else np.zeros(RESOURCE_DIMS)
+                eu, _, _ = scorer.score(
+                    [hyps[i]], authoritative_rho + others, idle_window
+                )
+                total += float(eu[0])
+            if total > best[0]:
+                best = (total, subset)
+    return [hyps[i] for i in best[1]], best[0]

@@ -1,0 +1,124 @@
+"""Tool execution semantics: deterministic results over sandboxed state.
+
+Every tool is a pure function of (args, state views); speculative runs get a
+Sandbox (CoW views), authoritative runs get the live AgentState.  Results
+are structured dicts so late-binding transforms (patterns.py) have fields to
+key on — mirroring PASTE's observation that many arguments are derivable
+from prior outputs.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Union
+
+from repro.core.events import DEFAULT_TOOLS, Event, SafetyLevel, ToolSpec
+from repro.core.sandbox import AgentState, CowView, Sandbox
+
+
+def _h(s: str) -> str:
+    return hashlib.sha1(str(s).encode()).hexdigest()[:8]
+
+
+class StateFacade:
+    """Uniform M/F/E access over AgentState or Sandbox."""
+
+    def __init__(self, st: Union[AgentState, Sandbox]):
+        self._st = st
+        self.writes: set = set()            # namespaced keys written (live only)
+        if isinstance(st, Sandbox):
+            self.M, self.F, self.E = st.M, st.F, st.E
+            self.sandboxed = True
+        else:
+            self.M = _DictView(st.memory, self.writes, "M")
+            self.F = _DictView(st.fs, self.writes, "F")
+            self.E = _DictView(st.env, self.writes, "E")
+            self.sandboxed = False
+
+    def bump_if_live(self):
+        if not self.sandboxed:
+            self._st.bump()
+
+
+class _DictView:
+    def __init__(self, d: Dict[str, Any], writes: set = None, ns: str = ""):
+        self._d = d
+        self._writes = writes
+        self._ns = ns
+
+    def get(self, k, default=None):
+        return self._d.get(k, default)
+
+    def set(self, k, v):
+        self._d[k] = v
+        if self._writes is not None:
+            self._writes.add(f"{self._ns}:{k}")
+
+    def delete(self, k):
+        self._d.pop(k, None)
+        if self._writes is not None:
+            self._writes.add(f"{self._ns}:{k}")
+
+    def __contains__(self, k):
+        return k in self._d
+
+    def keys(self):
+        return set(self._d.keys())
+
+
+def execute_tool(tool: str, args: Dict[str, Any], state: StateFacade) -> Dict[str, Any]:
+    """Deterministic tool semantics (synthetic but stateful)."""
+    if tool == "search":
+        q = str(args.get("query", ""))
+        urls = [f"url://{_h(q)}/{i}" for i in range(3)]
+        return {"results": urls, "top": urls[0]}
+    if tool in ("visit", "fetch"):
+        url = str(args.get("url", args.get("path", "")))
+        content = f"content::{_h(url)}"
+        state.F.set(url, content)          # read-through cache write (L1-safe)
+        return {"path": url, "content": content}
+    if tool == "grep":
+        pat = str(args.get("pattern", ""))
+        path = f"src/{_h(pat)}.py"
+        return {"path": path, "matches": 3}
+    if tool == "read":
+        path = str(args.get("path", ""))
+        return {"path": path, "content": state.F.get(path, f"orig::{_h(path)}")}
+    if tool == "parse":
+        path = str(args.get("path", ""))
+        content = state.F.get(path, "")
+        return {"path": path, "summary": f"sum::{_h(str(content))}"}
+    if tool == "edit":
+        path = str(args.get("path", ""))
+        change = str(args.get("change", ""))
+        state.F.set(path, f"edited::{change}")
+        state.bump_if_live()
+        return {"path": path, "ok": True}
+    if tool == "test":
+        target = str(args.get("target", ""))
+        content = str(state.F.get(target, ""))
+        ok = content.startswith("edited::fix")
+        return {"target": target, "pass": ok}
+    if tool == "build":
+        state.E.set("built", True)
+        state.bump_if_live()
+        return {"ok": True}
+    if tool == "pip_install":
+        pkg = str(args.get("pkg", ""))
+        state.E.set(f"pkg:{pkg}", "installed")
+        state.bump_if_live()
+        return {"pkg": pkg, "ok": True}
+    if tool == "pip_download":
+        pkg = str(args.get("pkg", ""))
+        state.F.set(f"cache/{pkg}.whl", "wheel")
+        return {"pkg": pkg, "cached": True}
+    if tool in ("session_init", "env_warmup"):
+        state.E.set(f"warm:{tool}", True)
+        return {"ok": True}
+    if tool == "deploy":
+        state.E.set("deployed", True)
+        state.bump_if_live()
+        return {"ok": True}
+    if tool == "model_step":
+        return {"ok": True}
+    raise KeyError(f"unknown tool {tool!r}")

@@ -1,0 +1,226 @@
+"""Branch hypotheses H = (G, q, Φ, ρ, σ)  (paper Eq. 1, §4).
+
+A hypothesis packages a *bounded local future subgraph* G (Tool /
+Preparation / Model / Barrier-Commit nodes with edges), the follow
+probability q, late-bound argument resolvers Φ, an aggregate multi-resource
+profile ρ, and safety annotations σ.  Hypotheses are assembled online by
+chaining PASTE pattern tuples from the pattern engine: each root candidate
+(context → tool) is extended depth-first with its own most-likely
+continuations, up to (max_depth, max_nodes) bounds, inserting PREP nodes
+before cold tools and BARRIER nodes before Level-2 (staged-write) nodes.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.events import (
+    DEFAULT_TOOLS, Event, ResourceVector, SafetyLevel, ToolSpec, signature,
+)
+from repro.core.patterns import ArgBinding, PatternEngine, PatternTuple
+
+
+class NodeKind(str, Enum):
+    TOOL = "tool"
+    PREP = "prep"
+    MODEL = "model"
+    BARRIER = "barrier"
+
+
+@dataclass
+class Node:
+    """One node of a future subgraph."""
+    idx: int
+    kind: NodeKind
+    tool: str
+    level: SafetyLevel
+    rho: ResourceVector
+    est_latency: float
+    bindings: Tuple[ArgBinding, ...] = ()
+    missing_args: Tuple[str, ...] = ()
+    cond_prob: float = 1.0        # P(this node | parent executed)
+
+    @property
+    def speculative_allowed(self) -> bool:
+        return self.level != SafetyLevel.NON_SPECULATIVE
+
+
+@dataclass
+class BranchHypothesis:
+    """H_i = (G_i, q_i, Φ_i, ρ_i, σ_i)."""
+    hid: int
+    nodes: List[Node]
+    edges: List[Tuple[int, int]]          # DAG over node idx
+    q: float                              # follow probability
+    context_key: Tuple                    # signature context it was built from
+    created_t: float = 0.0
+
+    # ---- derived ----
+    @property
+    def rho(self) -> ResourceVector:
+        """Aggregate resource profile (peak over the serial chain = max)."""
+        agg = ResourceVector()
+        for n in self.nodes:
+            agg = ResourceVector(
+                max(agg.cpu, n.rho.cpu), max(agg.mem_bw, n.rho.mem_bw),
+                max(agg.io, n.rho.io), max(agg.accel, n.rho.accel),
+            )
+        return agg
+
+    @property
+    def sigma(self) -> SafetyLevel:
+        """Strictest safety class present."""
+        return max((n.level for n in self.nodes), default=SafetyLevel.READ_ONLY)
+
+    def solo_latency(self) -> float:
+        return sum(n.est_latency for n in self.nodes)
+
+    def safe_prefix(self, allow_staged: bool = True) -> List[Node]:
+        """Longest speculatively-executable prefix (§6.3).
+
+        MODEL nodes are future reasoning boundaries — never executed by the
+        tool-speculation runtime (they bound the prefix).  BARRIER nodes
+        bound the prefix unless the policy allows staged Level-2 execution
+        (writes stay sandbox-local until authoritative confirmation either
+        way).  NON_SPECULATIVE always bounds."""
+        out = []
+        for n in self.nodes:
+            if n.kind == NodeKind.MODEL:
+                break
+            if n.kind == NodeKind.BARRIER and not allow_staged:
+                break
+            if n.level == SafetyLevel.NON_SPECULATIVE:
+                break
+            if n.kind == NodeKind.TOOL and n.missing_args:
+                break   # model-originated args: not executable ahead of time
+            if n.kind == NodeKind.BARRIER:
+                continue
+            out.append(n)
+        return out
+
+    def first_tool(self) -> Optional[Node]:
+        for n in self.nodes:
+            if n.kind == NodeKind.TOOL:
+                return n
+        return None
+
+
+@dataclass
+class HypothesisBuilder:
+    engine: PatternEngine
+    tools: Dict[str, ToolSpec] = field(default_factory=lambda: dict(DEFAULT_TOOLS))
+    max_depth: int = 4
+    max_nodes: int = 8
+    branch_factor: int = 3
+    min_q: float = 0.05
+    with_prep: bool = True        # PREP nodes are a B-PASTE §4.1 feature
+    _next_hid: itertools.count = field(default_factory=itertools.count)
+
+    def _tool_node(self, idx: int, pt: PatternTuple, cond: float) -> Node:
+        spec = self.tools[pt.tool]
+        return Node(
+            idx=idx, kind=NodeKind.TOOL, tool=pt.tool, level=spec.level,
+            rho=spec.rho, est_latency=spec.base_latency,
+            bindings=pt.bindings, missing_args=pt.missing_args, cond_prob=cond,
+        )
+
+    def build(self, history: Sequence[Event], now: float = 0.0,
+              beam_width: int = 8) -> List[BranchHypothesis]:
+        """Enumerate up to beam_width branch hypotheses for the current state."""
+        roots = self.engine.predict(history, top=self.branch_factor)
+        sigs = [signature(e) for e in history]
+        hyps: List[BranchHypothesis] = []
+        for root_pt, root_p in roots:
+            chains = self._expand_chain(sigs, root_pt, root_p)
+            for chain_pts, q in chains:
+                if q < self.min_q:
+                    continue
+                hyps.append(self._assemble(chain_pts, q, history, now))
+                if len(hyps) >= beam_width:
+                    break
+            if len(hyps) >= beam_width:
+                break
+        return hyps
+
+    def _expand_chain(
+        self, sigs: List, root: PatternTuple, root_p: float
+    ) -> List[Tuple[List[PatternTuple], float]]:
+        """Depth-first chains of pattern tuples: the root plus its most
+        likely continuations (predicted signatures appended in sig space)."""
+        chains: List[Tuple[List[PatternTuple], float]] = []
+
+        def grow(chain: List[PatternTuple], q: float, pseudo_sigs: List):
+            chains.append((list(chain), q))
+            if len(chain) >= self.max_depth:
+                return
+            nxt = self.engine.predict_sigs(pseudo_sigs, top=1)
+            for pt, p in nxt:
+                if q * p < self.min_q or pt.next_sig is None:
+                    continue
+                grow(chain + [pt], q * p, pseudo_sigs + [pt.next_sig])
+
+        grow([root], root_p, list(sigs) + [root.next_sig])
+        # prefer deeper chains first (they subsume shallower ones), then q
+        chains.sort(key=lambda c: (-len(c[0]), -c[1]))
+        # dedup: keep the maximal chain per root tool sequence
+        seen = set()
+        out = []
+        for chain, q in chains:
+            key = tuple(pt.tool for pt in chain)
+            if any(key == k[: len(key)] for k in seen):
+                continue
+            seen.add(key)
+            out.append((chain, q))
+        return out
+
+    def _assemble(
+        self, chain: List[PatternTuple], q: float, history: Sequence[Event], now: float
+    ) -> BranchHypothesis:
+        nodes: List[Node] = []
+        edges: List[Tuple[int, int]] = []
+        idx = 0
+        prev: Optional[int] = None
+        cold_tools = {"test", "build", "pip_install"}
+        for depth, pt in enumerate(chain):
+            spec = self.tools[pt.tool]
+            # preparation node before cold tools (speculative warm-up, §4.1)
+            if self.with_prep and pt.tool in cold_tools:
+                prep_spec = self.tools["env_warmup"]
+                nodes.append(Node(idx, NodeKind.PREP, "env_warmup",
+                                  prep_spec.level, prep_spec.rho,
+                                  prep_spec.base_latency))
+                if prev is not None:
+                    edges.append((prev, idx))
+                prev = idx
+                idx += 1
+            # commit barrier before Level-2 nodes (§4.1, §6.3)
+            if spec.level >= SafetyLevel.STAGED_WRITE:
+                nodes.append(Node(idx, NodeKind.BARRIER, "barrier",
+                                  SafetyLevel.READ_ONLY, ResourceVector(), 0.0))
+                if prev is not None:
+                    edges.append((prev, idx))
+                prev = idx
+                idx += 1
+            cond = pt.confidence if depth > 0 else 1.0
+            nodes.append(self._tool_node(idx, pt, cond))
+            if prev is not None:
+                edges.append((prev, idx))
+            prev = idx
+            idx += 1
+            if idx >= self.max_nodes:
+                break
+        # model node: the reasoning boundary that this branch would unlock
+        model_spec = self.tools["model_step"]
+        nodes.append(Node(idx, NodeKind.MODEL, "model_step", model_spec.level,
+                          model_spec.rho, model_spec.base_latency))
+        if prev is not None:
+            edges.append((prev, idx))
+        hist_key = tuple(signature(e) for e in history[-2:])
+        return BranchHypothesis(
+            hid=next(self._next_hid), nodes=nodes, edges=edges, q=q,
+            context_key=hist_key, created_t=now,
+        )

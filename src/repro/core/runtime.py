@@ -1,0 +1,715 @@
+"""B-PASTE runtime: Algorithm 1 (beam-aware opportunistic speculative
+scheduling) over the discrete-event simulator.
+
+Per tick (any job start/finish/preempt):
+  Phase 1  Confirm/Promote — match arriving authoritative invocations
+           against speculative branch nodes: completed → reuse result (+
+           commit the branch's state snapshot up to that node); running →
+           promote to authoritative (non-preemptible); completed prefix →
+           reuse prefix state and continue from the boundary.
+  Phase 2  Protect — if authoritative demand exceeds capacity, preempt
+           speculative jobs in ascending admission-EU order.
+  Phase 3  Run authoritative jobs (primary FIFO policy, untouched).
+  Phase 4  Opportunistic branch scheduling — refresh the beam, score EU
+           (Eq. 3), greedily admit the highest-value branch *prefixes*
+           under min(R_slack, B); admitted prefixes run as preemptible
+           speculative jobs inside CoW sandboxes.
+
+Modes:
+  "bpaste"   — full system (beam of branch hypotheses, EU objective)
+  "paste"    — single-invocation speculation, expected-saved-latency rank
+               (the PASTE baseline per [1])
+  "parallel" — naive concurrency: admit everything that fits, probability
+               order, no EU/no preemption priority (the strawman §9 argues
+               against)
+  "serial"   — no speculation
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.admission import greedy_admit
+from repro.core.events import (
+    DEFAULT_TOOLS, RESOURCE_DIMS, Event, ResourceVector, SafetyLevel, ToolSpec,
+)
+from repro.core.executor import StateFacade, execute_tool
+from repro.core.hypothesis import BranchHypothesis, HypothesisBuilder, Node, NodeKind
+from repro.core.interference import Machine
+from repro.core.patterns import PatternEngine
+from repro.core.safety import EligibilityPolicy, FULL_POLICY
+from repro.core.sandbox import AgentState, Sandbox
+from repro.core.scoring import Scorer
+from repro.core.simulator import SimJob, Simulator
+from repro.core.workload import Episode
+
+
+@dataclass
+class NodeRun:
+    node: Node
+    resolved_args: Dict[str, Any]
+    status: str = "pending"       # pending|running|done|reused|promoted
+    job: Optional[SimJob] = None
+    result: Any = None
+    run_tool: str = ""            # actual (possibly transformed) tool
+    transformed: bool = False
+    snapshot: Optional[Dict[str, Dict[str, Any]]] = None  # cumulative overlay
+
+
+@dataclass
+class HypRun:
+    hyp: BranchHypothesis
+    eid: int
+    sandbox: Sandbox
+    node_runs: List[NodeRun]
+    eu: float
+    cursor: int = 0               # next node index to launch
+    status: str = "active"        # active|done|squashed
+    used: bool = False            # any node reused/promoted (waste metric)
+
+
+@dataclass
+class EpisodeState:
+    ep: Episode
+    state: AgentState
+    history: List[Event] = field(default_factory=list)
+    step_idx: int = 0
+    phase: str = "init"           # reasoning|acting|done
+    t_start: float = 0.0
+    t_end: float = 0.0
+    pending_action: Optional[Tuple[str, Dict[str, Any]]] = None
+    inflight: Optional[Tuple[str, Dict[str, Any]]] = None
+    matched_hr: Optional["HypRun"] = None
+    last_writes: set = field(default_factory=set)
+    hyp_runs: List[HypRun] = field(default_factory=list)
+    auth_queue: List[SimJob] = field(default_factory=list)
+
+
+@dataclass
+class RuntimeConfig:
+    mode: str = "bpaste"
+    beam_k: int = 6
+    max_nodes: int = 12
+    lam: float = 0.5
+    mu: float = 1.0
+    budget: ResourceVector = ResourceVector(cpu=8, mem_bw=60, io=400, accel=1)
+    idle_window: float = 8.0
+    max_concurrent_episodes: int = 1
+    seed: int = 0
+    warm_discount: float = 0.65   # prep-node payoff on cold tools (§4.1)
+    warm_ttl: float = 120.0
+
+
+@dataclass
+class Metrics:
+    makespan: float = 0.0
+    episode_latencies: List[float] = field(default_factory=list)
+    serial_reference: float = 0.0
+    promotions: int = 0
+    reuses: int = 0
+    prefix_reuses: int = 0
+    mis_speculations: int = 0
+    wasted_solo_seconds: float = 0.0
+    spec_solo_seconds: float = 0.0
+    qos_violations: int = 0
+    auth_slowdown_samples: List[float] = field(default_factory=list)
+
+    def summary(self) -> Dict[str, float]:
+        lat = np.array(self.episode_latencies) if self.episode_latencies else np.zeros(1)
+        total_spec = max(self.spec_solo_seconds, 1e-9)
+        return {
+            "makespan": self.makespan,
+            "mean_latency": float(lat.mean()),
+            "p95_latency": float(np.percentile(lat, 95)),
+            "promotions": self.promotions,
+            "reuses": self.reuses,
+            "prefix_reuses": self.prefix_reuses,
+            "mis_speculations": self.mis_speculations,
+            "wasted_frac": self.wasted_solo_seconds / total_spec,
+            "spec_solo_seconds": self.spec_solo_seconds,
+            "qos_violations": self.qos_violations,
+            "mean_auth_slowdown": float(np.mean(self.auth_slowdown_samples))
+            if self.auth_slowdown_samples else 1.0,
+        }
+
+
+class BPasteRuntime:
+    def __init__(
+        self,
+        episodes: List[Episode],
+        engine: PatternEngine,
+        machine: Machine = Machine(),
+        policy: EligibilityPolicy = FULL_POLICY,
+        rcfg: RuntimeConfig = RuntimeConfig(),
+        tools: Dict[str, ToolSpec] = DEFAULT_TOOLS,
+    ):
+        self.machine = machine
+        self.policy = policy
+        self.rcfg = rcfg
+        self.tools = tools
+        self.rng = np.random.default_rng(rcfg.seed)
+        self.engine = engine
+        self.builder = HypothesisBuilder(engine, tools=tools)
+        self.scorer = Scorer(machine, lam=rcfg.lam, mu=rcfg.mu,
+                             k_max=rcfg.beam_k, n_max=rcfg.max_nodes)
+        self.metrics = Metrics()
+        self.warm_until: float = -1.0         # env_warmup effect horizon
+        self.episodes = [EpisodeState(ep, AgentState()) for ep in episodes]
+        self._wave_ptr = 0
+        self.sim = Simulator(machine, self._tick)
+
+    # ==================================================================
+    def run(self) -> Metrics:
+        self._launch_wave()
+        self.sim.run()
+        self.metrics.makespan = self.sim.now
+        self.metrics.serial_reference = sum(
+            es.ep.serial_latency(self.tools) for es in self.episodes
+        )
+        # wasted speculative work: spec seconds in never-used hypotheses
+        for es in self.episodes:
+            for hr in es.hyp_runs:
+                for nr in hr.node_runs:
+                    if nr.job is None:
+                        continue
+                    if nr.status in ("done", "running") and not hr.used:
+                        self.metrics.wasted_solo_seconds += nr.job.executed_solo_seconds
+        return self.metrics
+
+    def _launch_wave(self):
+        active = sum(1 for es in self.episodes if es.phase not in ("init", "done"))
+        while (active < self.rcfg.max_concurrent_episodes
+               and self._wave_ptr < len(self.episodes)):
+            es = self.episodes[self._wave_ptr]
+            self._wave_ptr += 1
+            es.t_start = self.sim.now
+            es.phase = "reasoning"
+            self._start_model_step(es)
+            active += 1
+
+    # ==================================================================
+    # episode driving (authoritative path)
+    # ==================================================================
+    def _start_model_step(self, es: EpisodeState):
+        step = es.ep.steps[es.step_idx]
+        spec = self.tools["model_step"]
+
+        def done(sim: Simulator, job: SimJob):
+            self._on_reasoning_done(es)
+
+        job = self.sim.new_job(
+            f"model[e{es.ep.eid}.{es.step_idx}]", spec.rho.as_array(),
+            step.model_work, speculative=False, on_complete=done,
+        )
+        self.sim.start(job)
+
+    def _on_reasoning_done(self, es: EpisodeState):
+        step = es.ep.steps[es.step_idx]
+        es.pending_action = (step.tool, dict(step.args))
+        es.phase = "acting"
+        # Phase 1 happens inside the tick that follows this completion.
+
+    def _finish_action(self, es: EpisodeState, result: Any, dur_solo: float):
+        step = es.ep.steps[es.step_idx]
+        ev = Event("tool", step.tool, dict(step.args), result,
+                   self.sim.now - dur_solo, self.sim.now, es.ep.eid)
+        es.history.append(ev)
+        es.state.history.append(ev)
+        es.pending_action = None
+        es.inflight = None
+        keep = es.matched_hr
+        es.matched_hr = None
+        from repro.core.events import signature as _sig
+        tail = tuple(_sig(e) for e in es.history[-2:])
+        tail1 = tail[-1:] if tail else ()
+        preds = {pt.tool for pt, _ in self.engine.predict(es.history,
+                                                          top=self.builder.branch_factor)}
+        writes = getattr(es, "last_writes", set()) or set()
+        for hr in list(es.hyp_runs):
+            if hr.status != "active" or hr is keep:
+                continue
+            # state-safety: authoritative writes intersecting this branch's
+            # base read-set invalidate all its speculative results
+            if writes and (hr.sandbox.base_read_set & writes):
+                self._squash_one(es, hr)
+                continue
+            if hr.hyp.context_key in (tail, tail1):
+                continue                      # built for this context; still valid
+            # carry-over: keep branches whose next pending tool is still a
+            # top prediction for the new context (running work is preserved)
+            nxt = next((nr for nr in hr.node_runs
+                        if nr.node.kind == NodeKind.TOOL
+                        and nr.status in ("pending", "running")), None)
+            if nxt is not None and nxt.run_tool in preds:
+                continue
+            self._squash_one(es, hr)
+        es.hyp_runs = [hr for hr in es.hyp_runs if hr.status == "active"]
+        es.last_writes = set()
+        es.step_idx += 1
+        if es.step_idx >= len(es.ep.steps):
+            es.phase = "done"
+            es.t_end = self.sim.now
+            self.metrics.episode_latencies.append(es.t_end - es.t_start)
+            self._squash_all(es)
+            self._launch_wave()
+        else:
+            es.phase = "reasoning"
+            self._start_model_step(es)
+
+    COLD_TOOLS = ("test", "build", "pip_install")
+
+    def _start_auth_tool(self, es: EpisodeState, tool: str, args: Dict[str, Any]):
+        spec = self.tools[tool]
+        es.inflight = (tool, dict(args))
+        dur = spec.det_latency(args)
+        if tool in self.COLD_TOOLS and self.sim.now <= self.warm_until:
+            dur *= self.rcfg.warm_discount    # preparation-node payoff
+
+        def done(sim: Simulator, job: SimJob):
+            fac = StateFacade(es.state)
+            result = execute_tool(tool, args, fac)
+            es.last_writes = set(fac.writes)
+            if spec.level >= SafetyLevel.STAGED_WRITE:
+                es.state.bump()
+            self._finish_action(es, result, job.work)
+
+        job = self.sim.new_job(
+            f"{tool}[e{es.ep.eid}.{es.step_idx}]", spec.rho.as_array(), dur,
+            speculative=False, on_complete=done,
+        )
+        es.auth_queue.append(job)
+
+    # ==================================================================
+    # Phase 1: confirm / promote
+    # ==================================================================
+    def _pseudo_history(self, es: EpisodeState, hr: HypRun, upto: int) -> List[Event]:
+        """es.history extended with the branch's executed TOOL results before
+        node index `upto` — the view against which late bindings resolve."""
+        hist = list(es.history)
+        for p in hr.node_runs[:upto]:
+            if p.node.kind == NodeKind.TOOL and p.status in ("done", "reused", "promoted")                     and p.result is not None:
+                hist.append(Event("tool", p.run_tool, dict(p.resolved_args), p.result))
+        return hist
+
+    def _resolve_node_args(self, es: EpisodeState, hr: HypRun, i: int) -> Dict[str, Any]:
+        nr = hr.node_runs[i]
+        hist = self._pseudo_history(es, hr, i)
+        args = {b.arg_name: b.resolve(hist) for b in nr.node.bindings}
+        return {k: v for k, v in args.items() if v is not None}
+
+    def _match_action(self, es: EpisodeState, tool: str, args: Dict[str, Any]):
+        for hr in es.hyp_runs:
+            if hr.status != "active":
+                continue
+            for i, nr in enumerate(hr.node_runs):
+                if nr.node.kind != NodeKind.TOOL or nr.run_tool != tool:
+                    continue
+                if nr.transformed:
+                    continue                      # transformed results aren't a full match
+                prior_done = all(
+                    p.status in ("done", "reused")
+                    for p in hr.node_runs[:i] if p.node.kind == NodeKind.TOOL
+                )
+                if nr.status == "pending":
+                    if not prior_done:
+                        continue
+                    cand_args = self._resolve_node_args(es, hr, i)
+                    if any(cand_args.get(k) != v for k, v in args.items() if k in cand_args):
+                        continue              # resolved args contradict
+                elif nr.resolved_args != args:
+                    continue
+                return hr, i, nr
+        return None
+
+    def _phase1(self):
+        for es in self.episodes:
+            if es.phase != "acting" or es.pending_action is None:
+                continue
+            tool, args = es.pending_action
+            m = self._match_action(es, tool, args)
+            if m is None:
+                self._note_misses(es, tool, args)
+                self._start_auth_tool(es, tool, args)
+                es.pending_action = ("", {})  # guard double-start
+                es.pending_action = None
+                es.phase = "executing"
+                continue
+            hr, i, nr = m
+            hr.used = True
+            es.matched_hr = hr
+            if nr.status == "done":
+                # reuse: commit state snapshot up to node i, zero extra latency
+                ok = self._commit_upto(es, hr, i)
+                self.metrics.reuses += 1
+                if i > 0:
+                    self.metrics.prefix_reuses += 1
+                es.phase = "executing"
+                es.pending_action = None
+                self._finish_action(es, nr.result, 0.0)
+            elif nr.status == "running" and nr.job is not None:
+                # promote: job becomes authoritative, non-preemptible
+                nr.job.speculative = False
+                nr.job.priority = 0
+                nr.status = "promoted"
+                self.metrics.promotions += 1
+                es.phase = "executing"
+                es.pending_action = None
+                hr_ref, i_ref = hr, i
+
+                def on_promoted(sim: Simulator, job: SimJob, es=es, hr=hr_ref, i=i_ref):
+                    nr2 = hr.node_runs[i]
+                    self._snapshot(hr, nr2)
+                    self._commit_upto(es, hr, i)
+                    self._finish_action(es, nr2.result, job.work)
+
+                nr.job.meta["promoted_for"] = es.ep.eid
+                # chain our completion behind the existing callback
+                orig = nr.job.on_complete
+
+                def chained(sim, job, orig=orig, hook=on_promoted):
+                    if orig:
+                        orig(sim, job)
+                    hook(sim, job)
+
+                nr.job.on_complete = chained
+            else:
+                # valid prefix done, node not started: reuse prefix state and
+                # continue authoritatively from the boundary
+                self._commit_upto(es, hr, i - 1)
+                self.metrics.prefix_reuses += 1
+                es.phase = "executing"
+                es.pending_action = None
+                self._start_auth_tool(es, tool, args)
+
+    def _note_misses(self, es: EpisodeState, tool: str, args):
+        for hr in es.hyp_runs:
+            if hr.status == "active" and not hr.used and any(
+                nr.status in ("done", "running") for nr in hr.node_runs
+            ):
+                self.metrics.mis_speculations += 1
+        # context moved on: squash all (beam rebuilds in Phase 4)
+        self._squash_all(es)
+
+    def _snapshot(self, hr: HypRun, nr: NodeRun):
+        nr.snapshot = {
+            "M": dict(hr.sandbox.M._overlay),
+            "F": dict(hr.sandbox.F._overlay),
+            "E": dict(hr.sandbox.E._overlay),
+        }
+
+    def _commit_upto(self, es: EpisodeState, hr: HypRun, i: int) -> bool:
+        """Promotion commit via *replay*: re-derive the executed prefix's
+        results and staged effects against the LIVE state at zero latency.
+
+        Tools are Level-1 replayable or Level-2 deterministic staged writes,
+        so replay is exact; it also revalidates results when the base state
+        advanced after the speculative run (sandbox.is_stale) — the paper's
+        "replayable prefix" reuse semantics without stale-snapshot risk."""
+        fac = StateFacade(es.state)
+        for j in range(i + 1):
+            nr = hr.node_runs[j]
+            if nr.node.kind != NodeKind.TOOL or nr.status not in ("done", "promoted", "reused"):
+                continue
+            try:
+                nr.result = execute_tool(nr.run_tool, nr.resolved_args, fac)
+            except KeyError:
+                pass
+            nr.status = "reused" if nr.status == "done" else nr.status
+        es.last_writes = set(getattr(es, "last_writes", set())) | set(fac.writes)
+        es.state.bump()
+        hr.sandbox.base_version = es.state.version
+        return True
+
+    def _squash_one(self, es: EpisodeState, hr: HypRun):
+        hr.status = "squashed"
+        hr.sandbox.squash()
+        for nr in hr.node_runs:
+            if nr.job is not None:
+                if nr.status == "running":
+                    self.sim.preempt(nr.job.jid)
+                    nr.status = "pending"
+                burned = nr.job.executed_solo_seconds
+                self.metrics.spec_solo_seconds += max(
+                    0.0, burned - nr.job.work if nr.status == "done" else burned
+                ) if nr.status != "done" else 0.0
+                if not hr.used:
+                    self.metrics.wasted_solo_seconds += burned
+
+    def _squash_all(self, es: EpisodeState):
+        for hr in es.hyp_runs:
+            if hr.status == "active":
+                self._squash_one(es, hr)
+        es.hyp_runs = [hr for hr in es.hyp_runs if hr.status == "active"]
+
+    # ==================================================================
+    # Phase 2: protect authoritative jobs
+    # ==================================================================
+    def _phase2(self):
+        """Preempt speculative work (ascending EU) on every resource dim that
+        is oversubscribed AND where speculation actually contributes — a dim
+        the authoritative set alone oversubscribes cannot be relieved by
+        preemption, so it never justifies one."""
+        auth_pending = [j for es in self.episodes for j in es.auth_queue]
+        if not auth_pending:
+            return
+        need = np.sum([j.demand for j in auth_pending], axis=0)
+        running_auth = self.sim.running_demand(speculative=False)
+        cap = self.machine.cap_array()
+        spec_jobs = sorted(
+            (j for j in self.sim.running.values() if j.speculative),
+            key=lambda j: j.meta.get("eu", 0.0),
+        )
+        while spec_jobs:
+            spec_total = self.sim.running_demand(speculative=True)
+            overload = (running_auth + need + spec_total) > cap + 1e-9
+            relievable = overload & (spec_total > 1e-12)
+            if not np.any(relievable):
+                break
+            victim = next(
+                (j for j in spec_jobs if np.any(j.demand[relievable] > 0)), None
+            )
+            if victim is None:
+                break
+            spec_jobs.remove(victim)
+            self.sim.preempt(victim.jid)
+            nr = victim.meta.get("node_run")
+            if nr is not None:
+                nr.status = "pending"
+                nr.job = None
+
+    # ==================================================================
+    # Phase 3: run authoritative jobs (primary policy: FIFO, always fits)
+    # ==================================================================
+    def _phase3(self):
+        for es in self.episodes:
+            while es.auth_queue:
+                job = es.auth_queue.pop(0)
+                self.sim.start(job)
+
+    # ==================================================================
+    # Phase 4: opportunistic branch scheduling
+    # ==================================================================
+    def _phase4(self):
+        if self.rcfg.mode == "serial":
+            return
+        for es in self.episodes:
+            if es.phase not in ("reasoning", "executing"):
+                continue
+            if not es.history:
+                continue
+            self._refresh_beam(es)
+            self._admit(es)
+        self._launch_nodes()
+
+    def _remaining_key(self, node_runs_or_nodes):
+        out = []
+        for x in node_runs_or_nodes:
+            nr_status = getattr(x, "status", "pending")
+            node = getattr(x, "node", x)
+            if node.kind != NodeKind.TOOL:
+                continue
+            if nr_status in ("reused", "promoted"):
+                continue
+            out.append(node.tool)
+        return tuple(out)
+
+    def _refresh_beam(self, es: EpisodeState):
+        active = [hr for hr in es.hyp_runs if hr.status == "active"]
+        have = {self._remaining_key(hr.node_runs) for hr in active}
+        if self.rcfg.mode == "paste":
+            builder = dataclasses.replace(self.builder, max_depth=1, with_prep=False)
+        else:
+            builder = self.builder
+        hist = list(es.history)
+        if es.phase == "executing" and es.inflight is not None:
+            # speculate ACROSS the in-flight tool: its signature is known,
+            # its result is not (bindings to it resolve lazily, post-landing)
+            t, a = es.inflight
+            hist = hist + [Event("tool", t, dict(a), None)]
+        fresh = builder.build(hist, now=self.sim.now,
+                              beam_width=self.rcfg.beam_k)
+        for h in fresh:
+            key = self._remaining_key(h.nodes)
+            if key in have or len(active) >= self.rcfg.beam_k:
+                continue
+            nrs = []
+            ok = True
+            for n in h.nodes:
+                if n.kind != NodeKind.TOOL:
+                    nrs.append(NodeRun(n, {}, run_tool=n.tool))
+                    continue
+                form = self.policy.speculative_form(n.tool)
+                if form is None:
+                    ok = False
+                    break
+                run_tool, transformed = form
+                args = {b.arg_name: b.resolve(es.history) for b in n.bindings}
+                args = {k: v for k, v in args.items() if v is not None}
+                nrs.append(NodeRun(n, args, run_tool=run_tool, transformed=transformed))
+            if not ok:
+                continue
+            hr = HypRun(h, es.ep.eid, Sandbox(es.state, h.hid), nrs, eu=0.0)
+            es.hyp_runs.append(hr)
+            active.append(hr)
+            have.add(key)
+
+    def _admit(self, es: EpisodeState):
+        cand = [hr for hr in es.hyp_runs
+                if hr.status == "active" and self._next_launchable(hr) is not None
+                and not any(nr.status == "running" for nr in hr.node_runs)]
+        if not cand:
+            return
+        slack = self.sim.slack()
+        auth_rho = self.sim.running_demand(speculative=False)
+        if self.rcfg.mode == "parallel":
+            for hr in cand:
+                hr.eu = hr.hyp.q
+            cand.sort(key=lambda hr: -hr.hyp.q)
+            for hr in cand:
+                hr.meta_admitted = True
+            return
+        hyps = [hr.hyp for hr in cand]
+        res = greedy_admit(
+            hyps, self.scorer, slack, self.rcfg.budget.as_array(), auth_rho,
+            idle_window=self.rcfg.idle_window,
+        )
+        admitted_ids = {h.hid: res.eu[h.hid] for h in res.admitted}
+        for hr in cand:
+            if hr.hyp.hid in admitted_ids:
+                hr.eu = admitted_ids[hr.hyp.hid]
+                hr.meta_admitted = True
+            else:
+                hr.meta_admitted = False
+
+    def _next_launchable(self, hr: HypRun) -> Optional[int]:
+        """Index of the next executable (TOOL/PREP) node of the branch prefix,
+        or None.  BARRIERs pass when staged execution is allowed; MODEL nodes
+        always bound the prefix (reasoning is not tool-speculable here)."""
+        allow_staged = self.policy.max_level >= SafetyLevel.STAGED_WRITE
+        past_boundary = False   # beyond a model-originated-args TOOL node,
+                                # only Level-0 PREP nodes may run (§7 Level 0:
+                                # warm-up needs no arguments)
+        for i, nr in enumerate(hr.node_runs):
+            kind = nr.node.kind
+            if kind == NodeKind.MODEL:
+                return None
+            if kind == NodeKind.BARRIER:
+                if not allow_staged:
+                    return None
+                continue
+            if nr.node.level == SafetyLevel.NON_SPECULATIVE:
+                return None
+            if kind == NodeKind.TOOL and nr.node.missing_args:
+                past_boundary = True
+                continue
+            if past_boundary and kind != NodeKind.PREP:
+                continue
+            if kind == NodeKind.PREP and nr.status == "pending"                     and nr.run_tool == "env_warmup" and self.sim.now <= self.warm_until:
+                nr.status = "reused"          # already warm — prep is a no-op
+                continue
+            if nr.status == "pending":
+                prior = [p for p in hr.node_runs[:i]
+                         if p.node.kind in (NodeKind.TOOL, NodeKind.PREP)
+                         and not p.node.missing_args]
+                if all(p.status in ("done", "reused") for p in prior):
+                    return i
+                return None
+            if nr.status == "running":
+                return None
+        return None
+
+    def _launch_nodes(self):
+        cap = self.machine.cap_array()
+        for es in self.episodes:
+            for hr in es.hyp_runs:
+                if hr.status != "active" or not getattr(hr, "meta_admitted", False):
+                    continue
+                i = self._next_launchable(hr)
+                if i is None:
+                    continue
+                nr = hr.node_runs[i]
+                demand = nr.node.rho.as_array()
+                total = self.sim.running_demand() + demand
+                if np.any((total > cap + 1e-9) & (demand > 1e-12)):
+                    continue                      # no slack on a dim we need
+                self._start_spec_node(es, hr, i)
+
+    def _start_spec_node(self, es: EpisodeState, hr: HypRun, i: int) -> bool:
+        nr = hr.node_runs[i]
+        if nr.node.kind == NodeKind.TOOL and nr.node.bindings:
+            nr.resolved_args = self._resolve_node_args(es, hr, i)
+            if len(nr.resolved_args) < len(nr.node.bindings):
+                return False                  # inputs not materialized yet
+        spec = self.tools[nr.run_tool]
+        dur = spec.det_latency(nr.resolved_args)
+        if nr.run_tool in self.COLD_TOOLS and self.sim.now <= self.warm_until:
+            dur *= self.rcfg.warm_discount
+
+        def done(sim: Simulator, job: SimJob, es=es, hr=hr, i=i):
+            nr2 = hr.node_runs[i]
+            if nr2.run_tool == "env_warmup":
+                self.warm_until = max(self.warm_until, sim.now + self.rcfg.warm_ttl)
+            if hr.status != "active" and nr2.status != "promoted":
+                return
+            fac = StateFacade(hr.sandbox)
+            try:
+                nr2.result = execute_tool(nr2.run_tool, nr2.resolved_args, fac)
+            except KeyError:
+                nr2.result = None
+            hr.sandbox.record(Event("tool", nr2.run_tool, nr2.resolved_args,
+                                    nr2.result, job.started_at or 0.0, sim.now,
+                                    es.ep.eid))
+            if nr2.status != "promoted":
+                nr2.status = "done"
+            self._snapshot(hr, nr2)
+            self.metrics.spec_solo_seconds += job.work
+
+        job = self.sim.new_job(
+            f"spec:{nr.run_tool}[h{hr.hyp.hid}.{i}]",
+            spec.rho.as_array(), dur, speculative=True, on_complete=done,
+            meta={"eu": hr.eu, "node_run": nr, "hyp": hr.hyp.hid},
+        )
+        nr.job = job
+        nr.status = "running"
+        self.sim.start(job)
+        return True
+
+    # ==================================================================
+    def _tick(self, sim: Simulator):
+        self._phase1()
+        self._phase2()
+        self._phase3()
+        self._phase4()
+        # QoS accounting: authoritative slowdown attributable to speculation
+        dem = [j for j in sim.running.values()]
+        if dem and any(j.speculative for j in dem):
+            from repro.core.interference import slowdowns as _sl
+            auth = [j for j in dem if not j.speculative]
+            if auth:
+                mat_all = np.stack([j.demand for j in dem])
+                slows_all = _sl(mat_all, self.machine.cap_array())
+                mat_auth = np.stack([j.demand for j in auth])
+                slows_auth = _sl(mat_auth, self.machine.cap_array())
+                auth_all = [s for j, s in zip(dem, slows_all) if not j.speculative]
+                for s_with, s_without in zip(auth_all, slows_auth):
+                    ratio = s_with / max(s_without, 1e-9)
+                    self.metrics.auth_slowdown_samples.append(float(ratio))
+                    if ratio > 1.05:
+                        self.metrics.qos_violations += 1
+
+
+def run_mode(
+    episodes: List[Episode],
+    engine: PatternEngine,
+    mode: str,
+    machine: Machine = Machine(),
+    policy: EligibilityPolicy = FULL_POLICY,
+    seed: int = 0,
+    **kw,
+) -> Metrics:
+    rcfg = RuntimeConfig(mode=mode, seed=seed, **kw)
+    rt = BPasteRuntime(episodes, engine, machine, policy, rcfg)
+    return rt.run()

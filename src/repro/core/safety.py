@@ -1,0 +1,63 @@
+"""Operator-defined eligibility policy (paper §7).
+
+Three execution levels (Level 0 prep-only / Level 1 read-only-replayable /
+Level 2 staged-write) plus per-tool overrides and *transformed speculation*
+(PASTE's example: web search speculates freely while pip_install degrades to
+a dry-run/download-only variant).  By construction no speculative side
+effect becomes externally visible unless the authoritative path converges —
+commits require authoritative confirmation (sandbox.commit at promotion).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.events import DEFAULT_TOOLS, SafetyLevel, ToolSpec
+
+
+@dataclass
+class EligibilityPolicy:
+    """max_level: strictest class the runtime may *speculatively start*.
+    Level-2 nodes may only run inside a sandbox behind a commit barrier."""
+    max_level: SafetyLevel = SafetyLevel.STAGED_WRITE
+    overrides: Dict[str, SafetyLevel] = field(default_factory=dict)
+    transforms: Dict[str, str] = field(default_factory=dict)
+    tools: Dict[str, ToolSpec] = field(default_factory=lambda: dict(DEFAULT_TOOLS))
+
+    def __post_init__(self):
+        for name, spec in self.tools.items():
+            if spec.transformed and name not in self.transforms:
+                self.transforms[name] = spec.transformed
+
+    def level(self, tool: str) -> SafetyLevel:
+        if tool in self.overrides:
+            return self.overrides[tool]
+        spec = self.tools.get(tool)
+        return spec.level if spec else SafetyLevel.NON_SPECULATIVE
+
+    def eligible(self, tool: str) -> bool:
+        lvl = self.level(tool)
+        if lvl == SafetyLevel.NON_SPECULATIVE:
+            return tool in self.transforms
+        return lvl <= self.max_level
+
+    def speculative_form(self, tool: str) -> Optional[Tuple[str, bool]]:
+        """(tool_to_run, transformed?) for speculative execution, or None if
+        ineligible.  Level-2 tools above max_level degrade to their
+        transformed variant when one exists."""
+        lvl = self.level(tool)
+        if lvl <= min(self.max_level, SafetyLevel.READ_ONLY):
+            return (tool, False)
+        if lvl <= self.max_level and lvl == SafetyLevel.STAGED_WRITE:
+            return (tool, False)          # allowed, but sandbox + barrier
+        if tool in self.transforms:
+            return (self.transforms[tool], True)
+        return None
+
+    def requires_sandbox_write(self, tool: str) -> bool:
+        return self.level(tool) >= SafetyLevel.STAGED_WRITE
+
+
+READ_ONLY_POLICY = EligibilityPolicy(max_level=SafetyLevel.READ_ONLY)
+PREP_ONLY_POLICY = EligibilityPolicy(max_level=SafetyLevel.PREP_ONLY)
+FULL_POLICY = EligibilityPolicy(max_level=SafetyLevel.STAGED_WRITE)

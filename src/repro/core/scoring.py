@@ -1,0 +1,151 @@
+"""Expected critical-path reduction scoring (paper Eq. 3–4), JAX-vectorized.
+
+    EU(H_i | S) = q_i · ( ΔO_i(S) + λ·ΔU_i(S) − μ·ΔI_i(S) )
+
+Instantiation (the paper defines the terms semantically; these are our
+concrete estimators, documented in DESIGN.md):
+
+  ΔO_i — overlap gain: the solo latency of the admitted *prefix*, i.e. the
+        serial time hidden if the agent follows this branch (capped by the
+        expected idle window when provided).
+  ΔU_i — downstream unlock gain: the critical-path length of the subgraph
+        *behind* the prefix (longest path over G_i restricted to post-prefix
+        nodes, each weighted by its conditional probability).  Early prefix
+        completion lets this chain start earlier, so its critical path is
+        the unlockable latency.
+  ΔI_i — interference penalty: bottleneck-model stretch of the candidate
+        prefix under the currently-admitted demand, plus the stretch it
+        inflicts on the admitted set (Eq. 4: L^co − L^solo).
+
+The whole beam is scored in one jit call over padded (K, N) tables — the
+scheduler itself must not eat the slack it is trying to exploit.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.events import RESOURCE_DIMS
+from repro.core.hypothesis import BranchHypothesis, NodeKind
+from repro.core.interference import Machine
+
+
+@dataclass
+class PackedBeam:
+    """Padded arrays for a beam of K hypotheses, Nmax nodes each."""
+    node_lat: np.ndarray      # (K, N)
+    node_prob: np.ndarray     # (K, N) conditional probs
+    node_mask: np.ndarray     # (K, N)
+    prefix_mask: np.ndarray   # (K, N)
+    adj: np.ndarray           # (K, N, N)  adj[k, i, j] = edge i->j
+    q: np.ndarray             # (K,)
+    rho: np.ndarray           # (K, R) prefix aggregate demand
+    k_valid: np.ndarray       # (K,) hypothesis mask
+
+
+def pack_beam(hyps: Sequence[BranchHypothesis], k_max: int, n_max: int) -> PackedBeam:
+    K, N = k_max, n_max
+    node_lat = np.zeros((K, N))
+    node_prob = np.ones((K, N))
+    node_mask = np.zeros((K, N))
+    prefix_mask = np.zeros((K, N))
+    adj = np.zeros((K, N, N))
+    q = np.zeros((K,))
+    rho = np.zeros((K, RESOURCE_DIMS))
+    k_valid = np.zeros((K,))
+    for k, h in enumerate(hyps[:K]):
+        k_valid[k] = 1.0
+        q[k] = h.q
+        prefix_ids = {n.idx for n in h.safe_prefix()}
+        agg = np.zeros(RESOURCE_DIMS)
+        for n in h.nodes[:N]:
+            node_lat[k, n.idx] = n.est_latency
+            node_prob[k, n.idx] = n.cond_prob
+            node_mask[k, n.idx] = 1.0
+            if n.idx in prefix_ids:
+                prefix_mask[k, n.idx] = 1.0
+                agg = np.maximum(agg, n.rho.as_array())
+        rho[k] = agg
+        for i, j in h.edges:
+            if i < N and j < N:
+                adj[k, i, j] = 1.0
+    return PackedBeam(node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters",))
+def _critical_path(adj, lat, mask, n_iters: int):
+    """Longest path (per hypothesis) over masked DAG.  adj (K,N,N), lat (K,N)."""
+    lat = lat * mask
+
+    def body(_, dist):
+        # dist[k, j] = max_i adj[i,j] * (dist[i] + lat[j])
+        via = jnp.max(adj * (dist[:, :, None] + lat[:, None, :]), axis=1)
+        return jnp.maximum(dist, via * (mask > 0))
+
+    dist0 = lat
+    dist = jax.lax.fori_loop(0, n_iters, body, dist0)
+    return dist.max(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes",))
+def score_beam(
+    node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid,
+    admitted_rho, cap, lam, mu, idle_window, n_nodes: int,
+):
+    """Vectorized EU for every hypothesis given the admitted demand.
+
+    Returns (eu (K,), delta_o, delta_u, delta_i)."""
+    # ΔO: solo latency of the prefix, capped by the idle window estimate
+    l_solo = (node_lat * prefix_mask).sum(axis=1)
+    delta_o = jnp.minimum(l_solo, idle_window)
+    # ΔU: critical path of the post-prefix remainder, probability-weighted
+    post_mask = node_mask * (1.0 - prefix_mask)
+    exp_lat = node_lat * node_prob
+    delta_u = _critical_path(adj, exp_lat, post_mask, n_iters=n_nodes)
+    # ΔI: bottleneck stretch of prefix under admitted demand + inflicted
+    util = (admitted_rho[None, :] + rho) / cap[None, :]          # (K,R)
+    stretch = jnp.where(rho > 0, jnp.maximum(util, 1.0), 1.0).max(axis=1)
+    self_pen = l_solo * (stretch - 1.0)
+    # inflicted on admitted set: admitted work stretched by new util
+    adm_util = admitted_rho / cap
+    adm_stretch_before = jnp.maximum(adm_util, 1.0).max()
+    adm_stretch_after = jnp.where(
+        admitted_rho[None, :] > 0, jnp.maximum(util, 1.0), 1.0
+    ).max(axis=1)
+    inflicted = jnp.maximum(adm_stretch_after - adm_stretch_before, 0.0) * idle_window
+    delta_i = self_pen + inflicted
+    eu = q * (delta_o + lam * delta_u - mu * delta_i) * k_valid
+    return eu, delta_o, delta_u, delta_i
+
+
+@dataclass
+class Scorer:
+    machine: Machine
+    lam: float = 0.5
+    mu: float = 1.0
+    k_max: int = 8
+    n_max: int = 12
+
+    def score(
+        self,
+        hyps: Sequence[BranchHypothesis],
+        admitted_rho: np.ndarray,
+        idle_window: float = 10.0,
+    ) -> Tuple[np.ndarray, PackedBeam, dict]:
+        pb = pack_beam(hyps, self.k_max, self.n_max)
+        eu, do, du, di = score_beam(
+            pb.node_lat, pb.node_prob, pb.node_mask, pb.prefix_mask, pb.adj,
+            pb.q, pb.rho, pb.k_valid,
+            jnp.asarray(admitted_rho), jnp.asarray(self.machine.cap_array()),
+            self.lam, self.mu, idle_window, n_nodes=self.n_max,
+        )
+        detail = {
+            "delta_o": np.asarray(do), "delta_u": np.asarray(du),
+            "delta_i": np.asarray(di),
+        }
+        return np.asarray(eu), pb, detail

@@ -1,0 +1,136 @@
+"""Discrete-event simulator: virtual clock, multi-resource machine,
+interference-stretched preemptible jobs.
+
+Progress model: a job j with solo work W_j progresses at rate 1/slow_j(S)
+where slow_j is the bottleneck-model stretch of the *current* co-run set S
+(interference.py).  Whenever the run set changes (start / finish / preempt)
+rates are recomputed — piecewise-linear progress, exact completion times.
+
+The runtime (runtime.py) plugs in as a `tick(sim)` callback invoked after
+every state change; preemption keeps remaining work so jobs resume without
+losing progress (paper §6: speculative work must be immediately
+preemptible and reclaimable).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.events import RESOURCE_DIMS
+from repro.core.interference import Machine, slowdowns
+
+EPS = 1e-9
+
+
+@dataclass
+class SimJob:
+    jid: int
+    name: str
+    demand: np.ndarray            # (R,)
+    work: float                   # solo seconds
+    speculative: bool
+    priority: int = 0             # 0 = authoritative, 1 = speculative
+    remaining: float = -1.0
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    preempt_count: int = 0
+    executed_solo_seconds: float = 0.0   # work actually burned (for waste metric)
+    on_complete: Optional[Callable[["Simulator", "SimJob"], None]] = None
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.remaining < 0:
+            self.remaining = self.work
+
+
+class Simulator:
+    def __init__(self, machine: Machine, tick: Callable[["Simulator"], None]):
+        self.machine = machine
+        self.cap = machine.cap_array()
+        self.now = 0.0
+        self.running: Dict[int, SimJob] = {}
+        self.tick = tick
+        self._jid = itertools.count()
+        self.log: List[tuple] = []
+        self.slow_samples: List[float] = []   # co-run slowdown ratio samples
+
+    # ------------------------------------------------------------------
+    def new_job(self, name: str, demand: np.ndarray, work: float, *,
+                speculative: bool, on_complete=None, meta=None) -> SimJob:
+        return SimJob(
+            jid=next(self._jid), name=name, demand=np.asarray(demand, float),
+            work=work, speculative=speculative,
+            priority=1 if speculative else 0,
+            on_complete=on_complete, meta=meta or {},
+        )
+
+    def start(self, job: SimJob):
+        if job.started_at is None:
+            job.started_at = self.now
+        self.running[job.jid] = job
+        self.log.append((self.now, "start", job.name, job.jid, job.speculative))
+
+    def preempt(self, jid: int) -> Optional[SimJob]:
+        job = self.running.pop(jid, None)
+        if job is not None:
+            job.preempt_count += 1
+            self.log.append((self.now, "preempt", job.name, job.jid, job.speculative))
+        return job
+
+    def running_demand(self, *, speculative: Optional[bool] = None) -> np.ndarray:
+        tot = np.zeros(RESOURCE_DIMS)
+        for j in self.running.values():
+            if speculative is None or j.speculative == speculative:
+                tot += j.demand
+        return tot
+
+    def slack(self) -> np.ndarray:
+        return np.maximum(self.cap - self.running_demand(), 0.0)
+
+    # ------------------------------------------------------------------
+    def _rates(self) -> Dict[int, float]:
+        jobs = list(self.running.values())
+        if not jobs:
+            return {}
+        dem = np.stack([j.demand for j in jobs])
+        slow = slowdowns(dem, self.cap)
+        for j, s in zip(jobs, slow):
+            if not j.speculative:
+                self.slow_samples.append(float(s))
+        return {j.jid: 1.0 / s for j, s in zip(jobs, slow)}
+
+    def step(self) -> bool:
+        """Advance to the next completion.  Returns False when idle."""
+        if not self.running:
+            return False
+        rates = self._rates()
+        t_next = min(self.now + j.remaining / rates[j.jid] for j in self.running.values())
+        dt = t_next - self.now
+        self.now = t_next
+        done: List[SimJob] = []
+        for j in self.running.values():
+            adv = dt * rates[j.jid]
+            j.remaining -= adv
+            j.executed_solo_seconds += adv
+            if j.remaining <= EPS:
+                done.append(j)
+        for j in done:
+            del self.running[j.jid]
+            j.finished_at = self.now
+            self.log.append((self.now, "finish", j.name, j.jid, j.speculative))
+        for j in done:
+            if j.on_complete:
+                j.on_complete(self, j)
+        return True
+
+    def run(self, max_time: float = 1e7, max_steps: int = 2_000_000):
+        self.tick(self)
+        steps = 0
+        while self.now < max_time and steps < max_steps:
+            if not self.step():
+                break
+            self.tick(self)
+            steps += 1

@@ -1,0 +1,146 @@
+"""Agent workload generator: ReAct-style scripted episodes over the paper's
+recurring motifs (edit-verify, locate-examine, search-visit, setup).
+
+Episodes are fully scripted at construction (tool semantics are
+deterministic over state, so the ground-truth action stream — including
+late-bound arguments — is computable ahead of time).  Every scheduler
+(serial / PASTE / B-PASTE / naive-parallel) replays the SAME episodes, so
+end-to-end comparisons are exact.  The runtime only ever sees the next
+action after the preceding model step completes — the execution graph is
+revealed online, per the paper's core premise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.events import DEFAULT_TOOLS, Event
+from repro.core.executor import StateFacade, execute_tool
+from repro.core.sandbox import AgentState
+
+
+@dataclass
+class Step:
+    model_work: float            # reasoning latency preceding the action
+    tool: str
+    args: Dict[str, Any]
+
+
+@dataclass
+class Episode:
+    eid: int
+    kind: str
+    steps: List[Step]
+
+    def serial_latency(self, tools=DEFAULT_TOOLS) -> float:
+        return sum(s.model_work + tools[s.tool].det_latency(s.args) for s in self.steps)
+
+
+def _model_work(rng) -> float:
+    return float(np.clip(rng.normal(2.5, 0.5), 1.0, 5.0))
+
+
+def _script_fix_bug(eid: int, rng) -> List[Step]:
+    """locate-examine + edit-verify motif."""
+    st = AgentState()
+    fac = StateFacade(st)
+    steps: List[Step] = []
+
+    def act(tool, **args):
+        steps.append(Step(_model_work(rng), tool, dict(args)))
+        return execute_tool(tool, args, fac)
+
+    r = act("grep", pattern=f"bug_{eid}")
+    path = r["path"]
+    act("read", path=path)
+    n_attempts = int(rng.integers(1, 4))
+    for j in range(n_attempts - 1):
+        act("edit", path=path, change=f"attempt{j}")
+        act("test", target=path)
+    act("edit", path=path, change="fix")
+    act("test", target=path)
+    return steps
+
+
+def _script_research(eid: int, rng) -> List[Step]:
+    """search-visit motif."""
+    st = AgentState()
+    fac = StateFacade(st)
+    steps: List[Step] = []
+
+    def act(tool, **args):
+        steps.append(Step(_model_work(rng), tool, dict(args)))
+        return execute_tool(tool, args, fac)
+
+    n_rounds = int(rng.integers(1, 4))
+    for k in range(n_rounds):
+        r = act("search", query=f"topic_{eid}_{k}")
+        r2 = act("visit", url=r["top"])
+        act("parse", path=r2["path"])
+    return steps
+
+
+def _script_setup(eid: int, rng) -> List[Step]:
+    """environment setup motif (Level-2 heavy: exercises transformed
+    speculation + staged writes)."""
+    st = AgentState()
+    fac = StateFacade(st)
+    steps: List[Step] = []
+
+    def act(tool, **args):
+        steps.append(Step(_model_work(rng), tool, dict(args)))
+        return execute_tool(tool, args, fac)
+
+    act("pip_install", pkg=f"dep_{eid}")
+    act("build")
+    r = act("grep", pattern=f"entry_{eid}")
+    act("test", target=r["path"])
+    return steps
+
+
+KINDS = {
+    "fix_bug": _script_fix_bug,
+    "research": _script_research,
+    "setup": _script_setup,
+}
+
+
+@dataclass
+class WorkloadConfig:
+    seed: int = 0
+    n_episodes: int = 20
+    mix: Tuple[Tuple[str, float], ...] = (
+        ("fix_bug", 0.5), ("research", 0.3), ("setup", 0.2),
+    )
+
+
+def make_episodes(cfg: WorkloadConfig) -> List[Episode]:
+    rng = np.random.default_rng(cfg.seed)
+    kinds, probs = zip(*cfg.mix)
+    episodes = []
+    for eid in range(cfg.n_episodes):
+        kind = str(rng.choice(kinds, p=np.array(probs) / sum(probs)))
+        steps = KINDS[kind](eid, rng)
+        episodes.append(Episode(eid, kind, steps))
+    return episodes
+
+
+def episodes_to_traces(episodes: Sequence[Episode]) -> List[List[Event]]:
+    """Offline mining traces: serially execute each episode and record events
+    with real results (timestamps synthetic; mining is time-free)."""
+    traces: List[List[Event]] = []
+    for ep in episodes:
+        st = AgentState()
+        fac = StateFacade(st)
+        t = 0.0
+        trace: List[Event] = []
+        for s in ep.steps:
+            t += s.model_work
+            res = execute_tool(s.tool, s.args, fac)
+            dur = DEFAULT_TOOLS[s.tool].base_latency
+            trace.append(Event("tool", s.tool, dict(s.args), res, t, t + dur, ep.eid))
+            t += dur
+        traces.append(trace)
+    return traces

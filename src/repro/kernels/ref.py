@@ -1,0 +1,131 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are deliberately the *simplest correct* implementations (materialized
+score matrices, sequential recurrences).  Kernel tests assert_allclose
+against these; they are never used on the hot path.
+
+Layout conventions (public API, shared with ops.py):
+  q, k, v : (B, S, H, D) / (B, S, KV, D)   -- "BSHD"
+  decode q: (B, H, D), cache: (B, Smax, KV, D)
+  SSD     : x (B, S, H, P), dt (B, S, H), A (H,), B/C (B, S, G, N), D (H,)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_expand(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, S, KV, D) -> (B, S, H, D) by repeating each kv head."""
+    b, s, kv, d = k.shape
+    if kv == n_heads:
+        return k
+    assert n_heads % kv == 0
+    return jnp.repeat(k, n_heads // kv, axis=2)
+
+
+def mha_reference(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Plain softmax attention oracle.  q (B,S,H,D), k/v (B,S,KV,D)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    k = _gqa_expand(k, h)
+    v = _gqa_expand(v, h)
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned (prefill: sk==sq)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def decode_attention_reference(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Single-token decode attention oracle.
+
+    q (B, H, D); k_cache/v_cache (B, Smax, KV, D); lengths (B,) = #valid
+    tokens (the query attends to positions [0, lengths)).
+    """
+    b, h, d = q.shape
+    smax = k_cache.shape[1]
+    kk = _gqa_expand(k_cache, h)
+    vv = _gqa_expand(v_cache, h)
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhd,bkhd->bhk", q, kk).astype(jnp.float32) * scale
+    kpos = jnp.arange(smax)[None, None, :]
+    mask = kpos < lengths[:, None, None]
+    if window is not None:
+        mask &= kpos >= (lengths[:, None, None] - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", probs.astype(vv.dtype), vv)
+
+
+def ssd_reference(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    D: jnp.ndarray,
+    *,
+    initial_state: Optional[jnp.ndarray] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential Mamba2 SSD recurrence oracle.
+
+    x (B,S,H,P), dt (B,S,H) (post-softplus), A (H,) (negative), B/C (B,S,G,N),
+    D (H,).  Heads are grouped: group g = h * G // H.
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    reps = h // g
+    Bh = jnp.repeat(B, reps, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(C, reps, axis=2)
+
+    def step(h_state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * A[None, :])  # (B,H)
+        upd = dtt[..., None, None] * xt[..., :, None] * bt[..., None, :]  # (B,H,P,N)
+        h_state = decay[..., None, None] * h_state + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h_state, ct)
+        return h_state, y
+
+    h0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), dtype=jnp.float32)
+    )
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Bh, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Ch, 1, 0).astype(jnp.float32),
+    )
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1) + D[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), h_final

@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+__doc__ = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the sharding config is coherent on the production
+mesh (16×16 single-pod / 2×16×16 multi-pod) and extracts the roofline
+inputs: memory_analysis, cost_analysis, and the HLO-derived FLOPs / HBM
+traffic / collective bytes (see launch/hlo.py — XLA's flat cost analysis
+does not scale while-loop bodies, ours does).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out-dir results/dryrun
+"""
+
+import argparse
+import functools
+import json
+import math
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, cell_supported, get_config
+from repro.launch import hlo as hlo_mod
+from repro.launch import roofline as roofline_mod
+from repro.launch import shardings as sh
+from repro.launch.input_specs import cache_structs, input_specs, opt_structs, param_structs
+from repro.launch.mesh import make_production_mesh, mesh_axes, mesh_counts
+from repro.models.model import MeshContext
+from repro.training import optimizer as opt_mod
+from repro.training import steps
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s/link
+
+
+def _shard_bytes(struct, spec: P, mesh) -> int:
+    """Per-device bytes of one array under a PartitionSpec."""
+    n = struct.dtype.itemsize
+    for i, d in enumerate(struct.shape):
+        parts = 1
+        if i < len(spec) and spec[i] is not None:
+            axes = spec[i] if isinstance(spec[i], tuple) else (spec[i],)
+            for a in axes:
+                parts *= mesh.shape[a]
+        n *= math.ceil(d / parts)
+    return n
+
+
+def tree_device_bytes(structs, specs, mesh) -> int:
+    total = [0]
+
+    def acc(s, sp):
+        total[0] += _shard_bytes(s, sp, mesh)
+
+    jax.tree.map(acc, structs, specs, is_leaf=lambda x: isinstance(x, P))
+    return total[0]
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, zero_opt: bool = False,
+               extra: Optional[Dict[str, Any]] = None,
+               overrides: Optional[Dict[str, Any]] = None,
+               fsdp: bool = False):
+    """Returns (jitted_fn, arg_structs_tuple, meta) for one cell."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"unsupported cell: {why}")
+    batch_axes, model_axis = mesh_axes(mesh)
+    nb, nm = mesh_counts(mesh)
+    mi = MeshContext(mesh, batch_axes, model_axis, nm, nb)
+    pspecs = sh.fsdp_param_specs(cfg, mesh) if fsdp else sh.param_specs(cfg, mesh)
+    p_structs = param_structs(cfg)
+    ns = functools.partial(sh.to_named, mesh=mesh)
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind}
+
+    if shape.kind == "train":
+        if fsdp:
+            ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+            bspecs = sh.fsdp_batch_specs(cfg, mesh, "train", shape.global_batch)
+        else:
+            ospecs = sh.opt_specs(cfg, mesh, zero=zero_opt)
+            bspecs = sh.batch_specs(cfg, mesh, "train")
+        o_structs = opt_structs(cfg)
+        b_structs = input_specs(cfg, shape)["batch"]
+        oc = opt_mod.AdamWConfig()
+        fn = functools.partial(steps.train_step, cfg=cfg, opt_cfg=oc, mesh_info=mi)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(ns(pspecs), ns(ospecs), ns(bspecs)),
+            out_shardings=(ns(pspecs), ns(ospecs), None),
+        )
+        args = (p_structs, o_structs, b_structs)
+        meta["param_bytes_per_device"] = tree_device_bytes(p_structs, pspecs, mesh)
+        meta["state_bytes_per_device"] = (
+            meta["param_bytes_per_device"] + tree_device_bytes(o_structs, ospecs, mesh)
+        )
+        meta["batch_bytes_per_device"] = tree_device_bytes(b_structs, bspecs, mesh)
+    elif shape.kind == "prefill":
+        bspecs = sh.batch_specs(cfg, mesh, "prefill")
+        b_structs = input_specs(cfg, shape)["batch"]
+        cspecs = sh.cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        fn = functools.partial(
+            steps.prefill_step, cfg=cfg, max_len=shape.seq_len, mesh_info=mi
+        )
+        jitted = jax.jit(
+            fn,
+            in_shardings=(ns(pspecs), ns(bspecs)),
+            out_shardings=(None, ns(cspecs)),
+        )
+        args = (p_structs, b_structs)
+        meta["param_bytes_per_device"] = tree_device_bytes(p_structs, pspecs, mesh)
+        meta["state_bytes_per_device"] = meta["param_bytes_per_device"]
+        c_structs = cache_structs(cfg, shape.global_batch, shape.seq_len)
+        meta["cache_bytes_per_device"] = tree_device_bytes(c_structs, cspecs, mesh)
+    else:  # decode
+        ispec = input_specs(cfg, shape)
+        cspecs = sh.cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        tok_spec = sh.cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)["lengths"]
+        fn = functools.partial(steps.serve_step, cfg=cfg, mesh_info=mi)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(ns(pspecs), ns(cspecs), NamedSharding(mesh, tok_spec)),
+            out_shardings=(None, None, ns(cspecs)),
+        )
+        args = (p_structs, ispec["cache"], ispec["tokens"])
+        meta["param_bytes_per_device"] = tree_device_bytes(p_structs, pspecs, mesh)
+        meta["state_bytes_per_device"] = meta["param_bytes_per_device"]
+        meta["cache_bytes_per_device"] = tree_device_bytes(ispec["cache"], cspecs, mesh)
+    if extra:
+        meta.update(extra)
+    return jitted, args, meta
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic 'useful' FLOPs for the cell (6·N·D train, 2·N·B decode)."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Optional[str],
+             zero_opt: bool = False, overrides: Optional[Dict[str, Any]] = None,
+             variant: str = "", fsdp: bool = False) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "devices": int(n_dev),
+        "variant": variant,
+    }
+    try:
+        jitted, args, meta = build_cell(arch, shape_name, mesh, zero_opt=zero_opt,
+                                        overrides=overrides, fsdp=fsdp)
+        lowered = jitted.lower(*args)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        stats = hlo_mod.analyze(compiled.as_text())
+        cfg = get_config(arch)
+        shape = SHAPES_BY_NAME[shape_name]
+        mf = model_flops(cfg, shape)
+        perdev_flops = stats["flops"]
+        record.update(meta)
+        from repro.launch.mesh import mesh_counts as _mc
+        nb, nm = _mc(mesh)
+        traffic = roofline_mod.traffic_model(
+            cfg, shape, nb, nm,
+            meta.get("param_bytes_per_device", 0),
+            meta.get("cache_bytes_per_device", 0),
+        )
+        record.update(
+            status="ok",
+            lower_s=round(t_lower - t0, 2),
+            compile_s=round(t_compile - t_lower, 2),
+            memory_analysis={
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            },
+            xla_cost={k: cost.get(k) for k in ("flops", "bytes accessed") if k in cost},
+            hlo_flops_per_device=perdev_flops,
+            hlo_bytes_per_device=stats["bytes"],   # diagnostic only (CPU f32-legalized)
+            analytic_bytes_per_device=traffic["total"],
+            traffic_breakdown={k: v for k, v in traffic.items() if k != "total"},
+            collective_bytes_per_device=stats["collective_bytes"],
+            collectives=stats["collectives"],
+            model_flops=mf,
+            compute_term_s=perdev_flops / PEAK_FLOPS,
+            memory_term_s=traffic["total"] / HBM_BW,
+            collective_term_s=stats["collective_bytes"] / ICI_BW,
+            useful_flops_ratio=(mf / (perdev_flops * n_dev)) if perdev_flops else 0.0,
+        )
+        terms = {
+            "compute": record["compute_term_s"],
+            "memory": record["memory_term_s"],
+            "collective": record["collective_term_s"],
+        }
+        record["bottleneck"] = max(terms, key=terms.get)
+        record["roofline_fraction"] = (
+            max(terms.values()) and record["compute_term_s"] / max(terms.values())
+        )
+    except Exception as e:
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"__{variant}" if variant else ""
+        path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}{tag}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2, default=str)
+    return record
+
+
+def iter_cells():
+    for arch, cfg in ARCHS.items():
+        for shape_name, shape in SHAPES_BY_NAME.items():
+            ok, why = cell_supported(cfg, shape)
+            yield arch, shape_name, ok, why
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--zero-opt", action="store_true")
+    ap.add_argument("--head-pad", type=int, default=0)
+    ap.add_argument("--sharded-decode", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--variant", default="")
+    args = ap.parse_args()
+    overrides = {}
+    if args.head_pad:
+        overrides["head_pad_multiple"] = args.head_pad
+    if args.sharded_decode:
+        overrides["sharded_decode_attn"] = True
+    if args.fsdp:
+        overrides["fsdp_act_constraint"] = True
+    if args.kv_int8:
+        overrides["kv_cache_dtype"] = "int8"
+    if args.no_remat:
+        overrides["remat"] = False
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    cells = []
+    if args.all:
+        for arch, shape_name, ok, why in iter_cells():
+            if ok:
+                cells.append((arch, shape_name))
+            else:
+                print(f"SKIP {arch} {shape_name}: {why}")
+    else:
+        cells.append((args.arch, args.shape))
+
+    for arch, shape_name in cells:
+        for mk in meshes:
+            rec = run_cell(arch, shape_name, mk, args.out_dir, zero_opt=args.zero_opt,
+                           overrides=overrides, variant=args.variant, fsdp=args.fsdp)
+            if rec["status"] == "ok":
+                print(
+                    f"OK {arch} {shape_name} {mk}: compile={rec['compile_s']}s "
+                    f"compute={rec['compute_term_s']:.3f}s mem={rec['memory_term_s']:.3f}s "
+                    f"coll={rec['collective_term_s']:.3f}s bottleneck={rec['bottleneck']}"
+                )
+            else:
+                print(f"FAIL {arch} {shape_name} {mk}: {rec['error']}")
+
+
+if __name__ == "__main__":
+    main()

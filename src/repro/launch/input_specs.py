@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as model_mod
+from repro.training import optimizer as opt_mod
+
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: model_mod.init_params(jax.random.key(0), cfg))
+
+
+def opt_structs(cfg: ModelConfig):
+    params = param_structs(cfg)
+    return jax.eval_shape(opt_mod.init_opt_state, params)
+
+
+def cache_structs(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        functools.partial(model_mod.init_cache, cfg, batch, max_len)
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Returns the kwargs-tree of ShapeDtypeStructs for the step function of
+    this (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    D = cfg.d_model
+    if shape.kind == "train":
+        if cfg.frontend == "tokens":
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        else:
+            batch = {
+                "embeds": jax.ShapeDtypeStruct((B, S, D), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        if cfg.frontend == "tokens":
+            return {"batch": {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}}
+        return {"batch": {"embeds": jax.ShapeDtypeStruct((B, S, D), jnp.bfloat16)}}
+    if shape.kind == "decode":
+        return {
+            "cache": cache_structs(cfg, B, S),
+            "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+    raise ValueError(shape.kind)

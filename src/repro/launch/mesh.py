@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The single-pod mesh is a
+16×16 = 256-chip pod (v5e-class); the multi-pod mesh stacks 2 pods on a
+leading ``pod`` (DCN) axis = 512 chips.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_local_mesh(model_parallel: Optional[int] = None):
+    """Mesh over whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    mp = model_parallel or 1
+    assert n % mp == 0
+    return jax.make_mesh(
+        (n // mp, mp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def mesh_axes(mesh) -> Tuple[Tuple[str, ...], str]:
+    """(batch_axes, model_axis) for a production-style mesh."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data"), "model"
+    return ("data",), "model"
+
+
+def mesh_counts(mesh) -> Tuple[int, int]:
+    """(n_batch, n_model)."""
+    batch_axes, model_axis = mesh_axes(mesh)
+    nb = 1
+    for a in batch_axes:
+        nb *= mesh.shape[a]
+    return nb, mesh.shape[model_axis]

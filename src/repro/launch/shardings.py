@@ -1,0 +1,278 @@
+"""PartitionSpec trees for params / optimizer state / batches / caches.
+
+Baseline layout (per DESIGN.md §7):
+  * batch dims over ("pod","data") [training] or ("data",) [serving]
+  * TP over "model": attention head-projections, MLP d_ff, vocab,
+    SSM heads (d_inner / nh), MoE experts (EP) or expert-d_ff (TP).
+  * a dim is sharded only when exactly divisible (GSPMD rejects
+    shard_count > dim; uneven padding is avoided for cleanliness).
+  * KV caches: batch over data; kv-heads over model when divisible,
+    else the sequence axis when divisible (else replicated).
+
+``zero_shard_opt`` additionally shards AdamW m/v over the batch axes
+(ZeRO-1 style) — a hillclimb lever for the large archs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+
+
+def _maybe(axis, dim: int, n: int):
+    return axis if (n > 1 and dim % n == 0 and dim >= n) else None
+
+
+def attn_specs(cfg: ModelConfig, model_axis: str, nm: int, stacked: bool) -> Dict[str, Any]:
+    H, KV, hd = cfg.eff_n_heads, cfg.eff_n_kv_heads, cfg.resolved_head_dim
+    m_q = _maybe(model_axis, H * hd, nm)
+    m_kv = _maybe(model_axis, KV * hd, nm)
+    L = (None,) if stacked else ()
+    s = {
+        "wq": P(*L, None, m_q),
+        "wk": P(*L, None, m_kv),
+        "wv": P(*L, None, m_kv),
+        "wo": P(*L, m_q, None),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P(*L, m_q)
+        s["bk"] = P(*L, m_kv)
+        s["bv"] = P(*L, m_kv)
+    return s
+
+
+def ssm_specs(cfg: ModelConfig, model_axis: str, nm: int) -> Dict[str, Any]:
+    ss = cfg.ssm
+    di = ss.d_inner(cfg.d_model)
+    nh = ss.n_heads(cfg.d_model)
+    gn = ss.n_groups * ss.d_state
+    m_di = _maybe(model_axis, di, nm)
+    m_nh = _maybe(model_axis, nh, nm)
+    return {
+        "w_z": P(None, None, m_di),
+        "w_x": P(None, None, m_di),
+        "w_B": P(None, None, None),
+        "w_C": P(None, None, None),
+        "w_dt": P(None, None, m_nh),
+        "conv_x_w": P(None, None, m_di),
+        "conv_x_b": P(None, m_di),
+        "conv_B_w": P(None, None, None),
+        "conv_B_b": P(None, None),
+        "conv_C_w": P(None, None, None),
+        "conv_C_b": P(None, None),
+        "A_log": P(None, m_nh),
+        "D": P(None, m_nh),
+        "dt_bias": P(None, m_nh),
+        "norm_w": P(None, m_di),
+        "out_proj": P(None, m_di, None),
+    }
+
+
+def param_specs(cfg: ModelConfig, mesh) -> Dict[str, Any]:
+    from repro.launch.mesh import mesh_axes, mesh_counts
+
+    batch_axes, model_axis = mesh_axes(mesh)
+    nb, nm = mesh_counts(mesh)
+    Vp, D, F = cfg.padded_vocab, cfg.d_model, cfg.d_ff
+    m_v = _maybe(model_axis, Vp, nm)
+    specs: Dict[str, Any] = {
+        "embed": P(m_v, None),
+        "final_norm": P(None),
+        "lm_head": P(None, m_v),
+    }
+    if cfg.frontend != "tokens":
+        specs["frontend_proj"] = P(None, None)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        blocks: Dict[str, Any] = {
+            "ln1": P(None, None),
+            "ln2": P(None, None),
+            "attn": attn_specs(cfg, model_axis, nm, stacked=True),
+        }
+        if cfg.family == "moe":
+            E, Fe = cfg.moe.n_experts, cfg.moe.d_ff_expert
+            if E % nm == 0:
+                blocks["moe"] = {
+                    "router": P(None, None, None),
+                    "w_gate": P(None, model_axis, None, None),
+                    "w_up": P(None, model_axis, None, None),
+                    "w_down": P(None, model_axis, None, None),
+                }
+            else:
+                m_f = _maybe(model_axis, Fe, nm)
+                blocks["moe"] = {
+                    "router": P(None, None, None),
+                    "w_gate": P(None, None, None, m_f),
+                    "w_up": P(None, None, None, m_f),
+                    "w_down": P(None, None, m_f, None),
+                }
+        else:
+            m_f = _maybe(model_axis, F, nm)
+            blocks["mlp"] = {
+                "w_gate": P(None, None, m_f),
+                "w_up": P(None, None, m_f),
+                "w_down": P(None, m_f, None),
+            }
+        specs["blocks"] = blocks
+    elif cfg.family == "ssm":
+        specs["blocks"] = {"ln": P(None, None), "ssm": ssm_specs(cfg, model_axis, nm)}
+    elif cfg.family == "hybrid":
+        specs["blocks"] = {"ln": P(None, None), "ssm": ssm_specs(cfg, model_axis, nm)}
+        specs["shared_attn"] = {
+            "ln": P(None),
+            "attn": attn_specs(cfg, model_axis, nm, stacked=False),
+        }
+    return specs
+
+
+def opt_specs(cfg: ModelConfig, mesh, *, zero: bool = False) -> Dict[str, Any]:
+    """AdamW state specs.  zero=True also shards m/v over the batch axes on
+    the largest (first shardable) unsharded dim (ZeRO-1-style)."""
+    from repro.launch.mesh import mesh_axes, mesh_counts
+
+    pspecs = param_specs(cfg, mesh)
+    if not zero:
+        mv = pspecs
+    else:
+        batch_axes, _ = mesh_axes(mesh)
+        nb, _ = mesh_counts(mesh)
+
+        def zero_one(spec: P):
+            # leading L axis (index 0 for stacked) stays; try to add batch
+            # axes on the first None dim — divisibility is checked at use
+            # site via eval_shape, so here we only transform the spec tree.
+            parts = list(spec)
+            for i, p in enumerate(parts):
+                if i == 0:
+                    continue  # keep L / leading dim for scan slicing
+                if p is None:
+                    parts[i] = batch_axes
+                    break
+            return P(*parts)
+
+        mv = jax.tree.map(zero_one, pspecs, is_leaf=lambda x: isinstance(x, P))
+    return {"m": mv, "v": mv, "step": P()}
+
+
+def batch_specs(cfg: ModelConfig, mesh, kind: str) -> Dict[str, Any]:
+    from repro.launch.mesh import mesh_axes
+
+    batch_axes, _ = mesh_axes(mesh)
+    ba = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    if kind == "train":
+        if cfg.frontend == "tokens":
+            return {"tokens": P(ba, None), "labels": P(ba, None)}
+        return {"embeds": P(ba, None, None), "labels": P(ba, None)}
+    if kind == "prefill":
+        if cfg.frontend == "tokens":
+            return {"tokens": P(ba, None)}
+        return {"embeds": P(ba, None, None)}
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, mesh, batch: int, max_len: int) -> Dict[str, Any]:
+    from repro.launch.mesh import mesh_axes, mesh_counts
+
+    batch_axes, model_axis = mesh_axes(mesh)
+    nb, nm = mesh_counts(mesh)
+    ba = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    b_ax = ba if (batch % nb == 0 and batch >= nb) else None
+    KV = cfg.eff_n_kv_heads
+    smax = model_mod._kv_smax(cfg, max_len)
+    kv_ax, seq_ax = _maybe(model_axis, KV, nm), None
+    if kv_ax is None:
+        seq_ax = _maybe(model_axis, smax, nm)
+    specs: Dict[str, Any] = {"lengths": P(b_ax)}
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        if cfg.kv_cache_dtype == "int8":
+            specs["k"] = (P(None, b_ax, seq_ax, kv_ax, None),
+                          P(None, b_ax, seq_ax, kv_ax))
+            specs["v"] = (P(None, b_ax, seq_ax, kv_ax, None),
+                          P(None, b_ax, seq_ax, kv_ax))
+        else:
+            specs["k"] = P(None, b_ax, seq_ax, kv_ax, None)
+            specs["v"] = P(None, b_ax, seq_ax, kv_ax, None)
+    if cfg.family in ("ssm", "hybrid"):
+        ss = cfg.ssm
+        di = ss.d_inner(cfg.d_model)
+        nh = ss.n_heads(cfg.d_model)
+        m_di = _maybe(model_axis, di, nm)
+        m_nh = _maybe(model_axis, nh, nm)
+        specs["ssm_state"] = (
+            P(None, b_ax, None, m_di),   # conv_x
+            P(None, b_ax, None, None),   # conv_B
+            P(None, b_ax, None, None),   # conv_C
+            P(None, b_ax, m_nh, None, None),  # ssm
+        )
+    if cfg.family == "hybrid":
+        kv_ax2 = _maybe(model_axis, KV, nm)
+        seq_ax2 = None if kv_ax2 is not None else _maybe(model_axis, max_len, nm)
+        specs["k"] = P(None, b_ax, seq_ax2, kv_ax2, None)
+        specs["v"] = P(None, b_ax, seq_ax2, kv_ax2, None)
+    return specs
+
+
+def to_named(tree, mesh):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def fsdp_param_specs(cfg: ModelConfig, mesh) -> Dict[str, Any]:
+    """ZeRO-3/FSDP layout: every parameter fully sharded over ALL mesh axes
+    on its largest divisible dim; batch also over all axes (1+ seq/chip).
+    GSPMD then all-gathers params per layer and reduce-scatters grads —
+    trading O(passes·P) gathers for the 6-per-layer activation all-reduces
+    of 1D TP.  See EXPERIMENTS.md §Perf (qwen2-7b train_4k iteration 2)."""
+    from repro.launch.input_specs import param_structs
+
+    axes = tuple(mesh.axis_names)
+    n_all = 1
+    for a in axes:
+        n_all *= mesh.shape[a]
+    structs = param_structs(cfg)
+
+    def spec_for(path_struct):
+        shape = path_struct.shape
+        # skip dim 0 for stacked block params (scan slices on it)
+        start = 1 if len(shape) >= 2 else 0
+        best = None
+        for i in range(len(shape) - 1, start - 1, -1):
+            if shape[i] % n_all == 0 and shape[i] >= n_all:
+                best = i
+                break
+        parts = [None] * len(shape)
+        if best is not None:
+            parts[best] = axes
+        return P(*parts)
+
+    return jax.tree.map(spec_for, structs)
+
+
+def fsdp_batch_axes(mesh, batch: int) -> tuple:
+    """Largest suffix of mesh axes whose size product divides the batch
+    (multi-pod: batch 256 < 512 chips -> shard over (data, model) only)."""
+    axes = tuple(mesh.axis_names)
+    for start in range(len(axes)):
+        sub = axes[start:]
+        n = 1
+        for a in sub:
+            n *= mesh.shape[a]
+        if n and batch % n == 0 and batch >= n:
+            return sub
+    return axes[-1:]
+
+
+def fsdp_batch_specs(cfg: ModelConfig, mesh, kind: str, batch: int) -> Dict[str, Any]:
+    axes = fsdp_batch_axes(mesh, batch)
+    if kind == "train":
+        if cfg.frontend == "tokens":
+            return {"tokens": P(axes, None), "labels": P(axes, None)}
+        return {"embeds": P(axes, None, None), "labels": P(axes, None)}
+    raise ValueError(kind)

@@ -1,0 +1,11 @@
+from repro.models.model import (
+    MeshContext,
+    decode_step,
+    embed_inputs,
+    forward,
+    hybrid_split,
+    init_cache,
+    init_params,
+    lm_logits,
+    prefill,
+)

@@ -1,0 +1,47 @@
+"""Shared model components: RMSNorm, RoPE, inits, dtype policy."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm with fp32 accumulation."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies (head_dim//2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x (..., S, H, D), positions (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                          # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    sin = jnp.sin(angles)[..., None, :]                 # (..., S, 1, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16, scale: float = 1.0):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis]
+    std = scale * (fan_in ** -0.5)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,23 @@
+"""SwiGLU MLP block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, split_keys
+
+
+def init_mlp_params(key, cfg: ModelConfig, dtype) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (D, F), dtype=dtype),
+        "w_up": dense_init(ks[1], (D, F), dtype=dtype),
+        "w_down": dense_init(ks[2], (F, D), dtype=dtype),
+    }
+
+
+def mlp_forward(p, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]

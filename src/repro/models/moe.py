@@ -1,0 +1,189 @@
+"""Mixture-of-Experts block.
+
+Dispatch is sort-based (GShard-style group-local capacity, no (T,E,C) one-hot
+tensors): tokens are routed to experts via a stable sort over expert ids,
+positions within each expert come from segment arithmetic, and the dispatch /
+combine are a scatter / gather pair.  Expert compute is a batched einsum with
+the *active* FLOPs only (2·T·k·cf·D·F per matmul).
+
+Distribution: executed inside ``jax.shard_map`` over the ``model`` mesh axis.
+  * E % n_model == 0  -> expert parallelism (each shard owns E/n_model experts,
+    computes partial token outputs, one psum over 'model' combines)
+  * otherwise         -> expert tensor parallelism (experts replicated, d_ff
+    sliced over 'model'; identical single psum)
+Both lower to exactly one all-reduce of (B, S, D) per MoE layer — the same
+collective shape as a TP MLP, which keeps the collective roofline clean.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, split_keys
+
+
+class MoEMeshInfo(NamedTuple):
+    mesh: object                 # jax.sharding.Mesh
+    batch_axes: tuple            # e.g. ('data',) or ('pod','data')
+    model_axis: str              # 'model'
+    n_model: int
+    n_batch: int
+
+
+def init_moe_params(key, cfg: ModelConfig, dtype) -> dict:
+    D = cfg.d_model
+    E, F = cfg.moe.n_experts, cfg.moe.d_ff_expert
+    ks = split_keys(key, 4)
+    return {
+        "router": dense_init(ks[0], (D, E), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (E, D, F), in_axis=1, dtype=dtype),
+        "w_up": dense_init(ks[2], (E, D, F), in_axis=1, dtype=dtype),
+        "w_down": dense_init(ks[3], (E, F, D), in_axis=1, dtype=dtype),
+    }
+
+
+def _route(x2d: jnp.ndarray, router: jnp.ndarray, cfg: ModelConfig):
+    """x2d (T, D) -> (gates (T,k) f32, experts (T,k) i32, router_probs (T,E))."""
+    k = cfg.moe.top_k
+    logits = (x2d.astype(jnp.float32) @ router).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, experts = jax.lax.top_k(probs, k)                      # (T,k)
+    if cfg.moe.renorm_gate:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    return gate_vals, experts, probs
+
+
+def _positions_in_expert(e_flat: jnp.ndarray, n_experts: int):
+    """Stable-sort segment positions.  e_flat (M,) -> pos (M,) with pos[i] =
+    rank of i among slots routed to the same expert (arrival order)."""
+    m = e_flat.shape[0]
+    order = jnp.argsort(e_flat, stable=True)
+    sorted_e = e_flat[order]
+    idx = jnp.arange(m)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]])
+    seg_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
+    pos_sorted = idx - seg_start
+    pos = jnp.zeros((m,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    return pos
+
+
+def _expert_ffn(xd: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    """xd (E, C, D) -> (E, C, D)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xd, w_gate)) * jnp.einsum(
+        "ecd,edf->ecf", xd, w_up
+    )
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _moe_local(p, x: jnp.ndarray, cfg: ModelConfig, n_local_experts: int,
+               expert_offset: jnp.ndarray | int = 0):
+    """Single-shard MoE over local experts [offset, offset+n_local).
+
+    x (B, S, D) -> (partial y (B, S, D), aux metrics dict).  Tokens routed to
+    non-local experts contribute zero (the cross-shard psum completes them).
+    """
+    b, s, d = x.shape
+    k = cfg.moe.top_k
+    E = cfg.moe.n_experts
+    t = b * s
+    x2d = x.reshape(t, d)
+    gates, experts, probs = _route(x2d, p["router"], cfg)
+
+    cap = max(1, int(math.ceil(t * k * cfg.moe.capacity_factor / E)))
+    e_flat = experts.reshape(t * k)
+    local = (e_flat >= expert_offset) & (e_flat < expert_offset + n_local_experts)
+    e_local = jnp.where(local, e_flat - expert_offset, n_local_experts)  # overflow bin
+    pos = _positions_in_expert(e_local, n_local_experts + 1)
+    keep = local & (pos < cap)
+    dump = n_local_experts * cap                       # scratch row for drops
+    dest = jnp.where(keep, e_local * cap + pos, dump)
+
+    tok_idx = jnp.arange(t * k) // k
+    x_rep = x2d[tok_idx]                               # (T*k, D)
+    disp = jnp.zeros((n_local_experts * cap + 1, d), x.dtype).at[dest].set(x_rep)
+    xd = disp[: n_local_experts * cap].reshape(n_local_experts, cap, d)
+
+    yd = _expert_ffn(xd, p["w_gate"], p["w_up"], p["w_down"])
+
+    y_rep = yd.reshape(n_local_experts * cap, d)[jnp.minimum(dest, dump - 1)]
+    y_rep = jnp.where(keep[:, None], y_rep, 0.0)
+    w = (gates.reshape(t * k) * keep).astype(jnp.float32)
+    y = jnp.zeros((t, d), jnp.float32).at[tok_idx].add(
+        y_rep.astype(jnp.float32) * w[:, None]
+    )
+
+    # Switch-style load-balance aux loss terms (computed on full router probs).
+    me = probs.mean(axis=0)                            # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[e_flat].add(1.0) / (t * k)
+    aux = {"lb_loss": E * jnp.sum(me * ce), "kept": keep.sum().astype(jnp.float32),
+           "slots": jnp.float32(t * k)}
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _moe_tp_local(p, x: jnp.ndarray, cfg: ModelConfig):
+    """Expert-TP shard body: all experts, sliced d_ff (weights pre-sliced)."""
+    return _moe_local(p, x, cfg, cfg.moe.n_experts, 0)
+
+
+def moe_forward(
+    p, x: jnp.ndarray, cfg: ModelConfig, mesh_info: Optional[MoEMeshInfo]
+):
+    """MoE block.  x (B,S,D) -> (y (B,S,D), aux dict)."""
+    if mesh_info is None:
+        y, aux = _moe_local(p, x, cfg, cfg.moe.n_experts, 0)
+        return y, {"lb_loss": aux["lb_loss"],
+                   "drop_frac": 1.0 - aux["kept"] / aux["slots"]}
+
+    E = cfg.moe.n_experts
+    nm = mesh_info.n_model
+    P = jax.sharding.PartitionSpec
+    ma = mesh_info.model_axis
+    # shard batch only when divisible (e.g. long_500k decodes with B=1)
+    shardable = x.shape[0] % mesh_info.n_batch == 0 and x.shape[0] >= mesh_info.n_batch
+    batch = mesh_info.batch_axes if shardable else None
+    x_spec = P(batch, None, None)
+
+    if E % nm == 0:
+        w_spec = {
+            "router": P(None, None),
+            "w_gate": P(ma, None, None),
+            "w_up": P(ma, None, None),
+            "w_down": P(ma, None, None),
+        }
+
+        def body(p_l, x_l):
+            rank = jax.lax.axis_index(ma)
+            y, aux = _moe_local(p_l, x_l, cfg, E // nm, rank * (E // nm))
+            # bf16 all-reduce (MaxText-style): halves ICI bytes vs f32
+            y = jax.lax.psum(y.astype(x_l.dtype), ma)
+            lb = jax.lax.pmean(aux["lb_loss"], ma).reshape(1)
+            drop = (1.0 - jax.lax.psum(aux["kept"], ma) / aux["slots"]).reshape(1)
+            return y, lb, drop
+    else:
+        w_spec = {
+            "router": P(None, None),
+            "w_gate": P(None, None, ma),
+            "w_up": P(None, None, ma),
+            "w_down": P(None, ma, None),
+        }
+
+        def body(p_l, x_l):
+            y, aux = _moe_tp_local(p_l, x_l, cfg)
+            y = jax.lax.psum(y.astype(x_l.dtype), ma)
+            lb = jax.lax.pmean(aux["lb_loss"], ma).reshape(1)
+            drop = (1.0 - jax.lax.pmean(aux["kept"], ma) / aux["slots"]).reshape(1)
+            return y, lb, drop
+
+    fn = jax.shard_map(
+        body,
+        mesh=mesh_info.mesh,
+        in_specs=(w_spec, x_spec),
+        out_specs=(x_spec, P(batch), P(batch)),
+        check_vma=False,
+    )
+    y, lb, drop = fn(p, x)
+    return y, {"lb_loss": lb.mean(), "drop_frac": drop.mean()}

@@ -1,0 +1,149 @@
+"""Mamba2 (SSD) block: init + train/prefill/decode application.
+
+TP-friendly layout: instead of one fused in_proj, the projections are split
+(w_z, w_x, w_dt sharded on their output = head axis; w_B, w_C replicated —
+they are tiny, G·N wide) so the SSD runs head-parallel over the `model` mesh
+axis with zero collectives until the out_proj all-reduce — the same
+collective profile as a TP MLP.
+
+  z  = h @ w_z                       (B,S,di)   [sharded di]
+  x  = silu(conv_x(h @ w_x))         (B,S,di)   [sharded di]
+  Bm = silu(conv_B(h @ w_B))         (B,S,G·N)  [replicated]
+  Cm = silu(conv_C(h @ w_C))         (B,S,G·N)  [replicated]
+  dt = softplus(h @ w_dt + bias)     (B,S,nh)   [sharded nh]
+  y  = SSD(x, dt, A, Bm, Cm, D)                 [head-parallel]
+  out = RMSNorm(y ⊙ silu(z)) @ w_out            [row-parallel -> all-reduce]
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.common import dense_init, rms_norm, split_keys
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    return s, di, nh, gn
+
+
+def init_ssm_params(key, cfg: ModelConfig, dtype) -> dict:
+    s, di, nh, gn = _dims(cfg)
+    ks = split_keys(key, 10)
+    dt = jnp.exp(
+        jax.random.uniform(ks[0], (nh,), jnp.float32)
+        * (jnp.log(s.dt_max) - jnp.log(s.dt_min))
+        + jnp.log(s.dt_min)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "w_z": dense_init(ks[1], (cfg.d_model, di), dtype=dtype),
+        "w_x": dense_init(ks[2], (cfg.d_model, di), dtype=dtype),
+        "w_B": dense_init(ks[3], (cfg.d_model, gn), dtype=dtype),
+        "w_C": dense_init(ks[4], (cfg.d_model, gn), dtype=dtype),
+        "w_dt": dense_init(ks[5], (cfg.d_model, nh), dtype=dtype),
+        "conv_x_w": dense_init(ks[6], (s.d_conv, di), in_axis=0, dtype=dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_B_w": dense_init(ks[7], (s.d_conv, gn), in_axis=0, dtype=dtype),
+        "conv_B_b": jnp.zeros((gn,), dtype),
+        "conv_C_w": dense_init(ks[8], (s.d_conv, gn), in_axis=0, dtype=dtype),
+        "conv_C_b": jnp.zeros((gn,), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[9], (nh,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[5], (di, cfg.d_model), dtype=dtype),
+    }
+
+
+def _causal_conv(xc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d + SiLU, window K.  xc (B,S,C); state (B,K-1,C)
+    carries trailing raw inputs of the previous segment."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xc.shape[0], k - 1, xc.shape[2]), xc.dtype)
+    else:
+        pad = state.astype(xc.dtype)
+    xp = jnp.concatenate([pad, xc], axis=1)          # (B, S+K-1, C)
+    out = sum(xp[:, i : i + xc.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, xc.shape[1]:]                   # last K-1 raw inputs
+    return jax.nn.silu(out), new_state
+
+
+def _conv_step(x_t: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, state: jnp.ndarray):
+    """One-token conv update.  x_t (B,C), state (B,K-1,C)."""
+    k = w.shape[0]
+    window = jnp.concatenate([state.astype(x_t.dtype), x_t[:, None]], axis=1)  # (B,K,C)
+    out = sum(window[:, i] * w[i] for i in range(k)) + b
+    return jax.nn.silu(out), window[:, 1:]
+
+
+def ssm_forward(
+    p, hidden: jnp.ndarray, cfg: ModelConfig, *,
+    impl: str, return_state: bool = False, initial_state=None,
+):
+    """Full-sequence Mamba2 block.  hidden (B,S,D).
+    state = (conv_x, conv_B, conv_C, ssm) when return_state."""
+    s, di, nh, gn = _dims(cfg)
+    b, seq, _ = hidden.shape
+    st = initial_state or (None, None, None, None)
+    z = hidden @ p["w_z"]
+    x, cxs = _causal_conv(hidden @ p["w_x"], p["conv_x_w"], p["conv_x_b"], st[0])
+    Bm, cbs = _causal_conv(hidden @ p["w_B"], p["conv_B_w"], p["conv_B_b"], st[1])
+    Cm, ccs = _causal_conv(hidden @ p["w_C"], p["conv_C_w"], p["conv_C_b"], st[2])
+    dt = jax.nn.softplus((hidden @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    x = x.reshape(b, seq, nh, s.head_dim)
+    Bm = Bm.reshape(b, seq, s.n_groups, s.d_state)
+    Cm = Cm.reshape(b, seq, s.n_groups, s.d_state)
+    y, ssm_state = ops.ssd_scan(
+        x, dt, A, Bm, Cm, p["D"], chunk=s.chunk, impl=impl, initial_state=st[3]
+    )
+    y = y.reshape(b, seq, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, (cxs, cbs, ccs, ssm_state)
+    return out
+
+
+def ssm_decode(p, hidden: jnp.ndarray, state, cfg: ModelConfig):
+    """One-token decode.  hidden (B,1,D); state=(conv_x (B,K-1,di),
+    conv_B (B,K-1,gn), conv_C (B,K-1,gn), ssm (B,nh,P,N))."""
+    s, di, nh, gn = _dims(cfg)
+    b = hidden.shape[0]
+    cx, cb, cc, ssm_state = state
+    h_t = hidden[:, 0]                                  # (B,D)
+    z = h_t @ p["w_z"]
+    x, cx = _conv_step(h_t @ p["w_x"], p["conv_x_w"], p["conv_x_b"], cx)
+    Bm, cb = _conv_step(h_t @ p["w_B"], p["conv_B_w"], p["conv_B_b"], cb)
+    Cm, cc = _conv_step(h_t @ p["w_C"], p["conv_C_w"], p["conv_C_b"], cc)
+    dt = jax.nn.softplus((h_t @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    x = x.reshape(b, nh, s.head_dim)
+    Bm = Bm.reshape(b, s.n_groups, s.d_state)
+    Cm = Cm.reshape(b, s.n_groups, s.d_state)
+    y, new_ssm = ops.ssm_decode_step(x, dt, A, Bm, Cm, p["D"], ssm_state)
+    y = y.reshape(b, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None], (cx, cb, cc, new_ssm)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    s, di, nh, gn = _dims(cfg)
+    return (
+        jnp.zeros((batch, s.d_conv - 1, di), jnp.bfloat16),
+        jnp.zeros((batch, s.d_conv - 1, gn), jnp.bfloat16),
+        jnp.zeros((batch, s.d_conv - 1, gn), jnp.bfloat16),
+        jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    )

@@ -1,0 +1,188 @@
+"""Batched decode engine with slot management (continuous batching).
+
+The engine owns a fixed-capacity batched KV/state cache; requests occupy
+*slots*.  Free slots are the serving-side analogue of the paper's "slack
+resources": B-PASTE admits speculative sequences into them, preempts by
+dropping a slot at the next decode-step boundary (one step = the preemption
+granularity on an accelerator), and promotes by re-tagging a slot
+authoritative — zero-copy, KV rows are slot-stable.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+
+
+@dataclass
+class Slot:
+    idx: int
+    request_id: Optional[int] = None
+    speculative: bool = False
+    eu: float = 0.0
+    tokens: List[int] = field(default_factory=list)
+    active: bool = False
+    done: bool = False
+
+
+def _write_slot(cache_tree, slot_cache_tree, slot: int):
+    """Write a single-sequence cache into batch position `slot`.
+
+    Batch position differs per leaf: KV leaves are (L, B, S, KV, hd) — batch
+    at axis 1; lengths (B,) at axis 0; ssm states (L, B, ...) axis 1."""
+
+    def upd(big, small):
+        # the batch axis is the first dim where the batched and the
+        # single-sequence cache disagree (1 vs max_batch)
+        axis = None
+        for i, (b_, s_) in enumerate(zip(big.shape, small.shape)):
+            if b_ != s_:
+                axis = i
+                break
+        if axis is None:
+            return small.astype(big.dtype)
+        idx = [slice(None)] * big.ndim
+        idx[axis] = slot
+        take = [slice(None)] * small.ndim
+        take[axis] = 0
+        return big.at[tuple(idx)].set(small[tuple(take)].astype(big.dtype))
+
+    return jax.tree.map(upd, cache_tree, slot_cache_tree)
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_batch: int = 8,
+        max_len: int = 1024,
+        mesh_info=None,
+        eos_id: int = 1,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.mesh_info = mesh_info
+        self.eos_id = eos_id
+        self.cache = model_mod.init_cache(cfg, max_batch, max_len)
+        self.slots = [Slot(i) for i in range(max_batch)]
+        self.pending_tokens = np.zeros((max_batch,), np.int32)
+        self.steps_executed = 0
+        self.spec_steps_executed = 0
+
+        # per-leaf batch axis, derived structurally (a size-1 probe cache
+        # differs from the batched cache exactly at the batch axis)
+        big_s = jax.eval_shape(lambda: model_mod.init_cache(cfg, max_batch, max_len))
+        small_s = jax.eval_shape(lambda: model_mod.init_cache(cfg, 1, max_len))
+        self._batch_axes = jax.tree.map(
+            lambda b, sm: next(
+                (i for i, (x, y) in enumerate(zip(b.shape, sm.shape)) if x != y), 0
+            ),
+            big_s, small_s,
+        )
+
+        def _mask_batch(new, old, mask, axis):
+            shape = [1] * new.ndim
+            shape[axis] = mask.shape[0]
+            return jnp.where(mask.reshape(shape), new, old)
+
+        @jax.jit
+        def _decode(params, cache, tokens, active_mask):
+            logits, new_cache = model_mod.decode_step(params, cfg, cache, tokens, mesh_info)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # inactive slots do not advance
+            new_cache = jax.tree.map(
+                lambda new, old, ax: _mask_batch(new, old, active_mask, ax),
+                new_cache, cache, self._batch_axes,
+            )
+            return nxt, new_cache
+
+        self._decode = _decode
+
+        @functools.partial(jax.jit, static_argnames=("prompt_len",))
+        def _prefill_one(params, tokens, prompt_len: int):
+            logits, cache1 = model_mod.prefill(
+                params, cfg, {"tokens": tokens}, max_len, mesh_info
+            )
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, cache1
+
+        self._prefill_one = _prefill_one
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [s.idx for s in self.slots if not s.active]
+
+    def slack(self) -> int:
+        """Idle batch capacity = the engine's slack resource."""
+        return len(self.free_slots())
+
+    def add_request(
+        self, prompt: List[int], *, request_id: int, speculative: bool = False,
+        eu: float = 0.0,
+    ) -> Optional[int]:
+        free = self.free_slots()
+        if not free:
+            return None
+        slot = free[0]
+        s = self.slots[slot]
+        s.request_id = request_id
+        s.speculative = speculative
+        s.eu = eu
+        s.tokens = list(prompt)
+        s.active = True
+        s.done = False
+        toks = jnp.asarray([prompt], jnp.int32)
+        nxt, cache1 = self._prefill_one(self.params, toks, len(prompt))
+        self.cache = _write_slot(self.cache, cache1, slot)
+        self.pending_tokens[slot] = int(nxt[0])
+        return slot
+
+    def preempt(self, slot: int):
+        """Reclaim a speculative slot at a step boundary (drop, zero-copy)."""
+        s = self.slots[slot]
+        assert s.speculative, "authoritative slots are never preempted"
+        s.active = False
+        s.request_id = None
+
+    def promote(self, slot: int, request_id: int):
+        """Speculative -> authoritative (non-preemptible), zero-copy."""
+        s = self.slots[slot]
+        s.speculative = False
+        s.request_id = request_id
+        s.eu = float("inf")
+
+    def step(self) -> Dict[int, int]:
+        """One batched decode step; returns {slot: new_token} for active slots."""
+        active = np.array([s.active and not s.done for s in self.slots])
+        if not active.any():
+            return {}
+        tokens = jnp.asarray(self.pending_tokens, jnp.int32)
+        nxt, self.cache = self._decode(self.params, self.cache, tokens, jnp.asarray(active))
+        nxt = np.asarray(nxt)
+        out: Dict[int, int] = {}
+        self.steps_executed += 1
+        self.spec_steps_executed += int(
+            sum(1 for s in self.slots if s.active and s.speculative)
+        )
+        for s in self.slots:
+            if not (s.active and not s.done):
+                continue
+            tok = int(nxt[s.idx])
+            s.tokens.append(int(self.pending_tokens[s.idx]))
+            self.pending_tokens[s.idx] = tok
+            out[s.idx] = tok
+            if tok == self.eos_id or len(s.tokens) >= self.max_len - 1:
+                s.done = True
+                s.active = False
+        return out

@@ -1,0 +1,87 @@
+"""Error-feedback int8 gradient compression for the cross-pod (DCN) axis.
+
+On the multi-pod mesh the gradient all-reduce crosses the slow inter-pod
+link once per step.  This module compresses that sync: each pod quantizes
+its gradient shard to int8 with a per-tensor scale (keeping the
+quantization residual in an error-feedback buffer so the bias vanishes
+over steps — 1-bit-Adam-style), all-gathers the int8 payload + scales over
+the ``pod`` axis (bytes = S·(n−1)/n per pod vs 2·S·(n−1)/n for a bf16
+ring all-reduce → 4× fewer DCN bytes), and sums the dequantized shards
+locally.
+
+Usage (opt-in):
+    err = init_error_feedback(grads)
+    grads, err = compressed_grad_sync(grads, err, mesh, axis="pod")
+Within-pod reduction stays in GSPMD (fast ICI); only the DCN hop is
+compressed.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def quantize_ef(g: jnp.ndarray, err: jnp.ndarray):
+    """Error-feedback int8 quantization.  Returns (q int8, scale f32 scalar,
+    new_err)."""
+    v = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+    new_err = v - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_grad_sync(grads, err_tree, mesh, axis: str = "pod"):
+    """Sync gradients across `axis` with int8 + error feedback.
+
+    grads enter as the LOCAL (per-pod) average; exit as the cross-pod mean.
+    Works per-leaf inside one shard_map over `axis` (other mesh axes pass
+    through untouched)."""
+    n = mesh.shape[axis]
+    P = jax.sharding.PartitionSpec
+
+    def leaf_sync(g, err):
+        def body(g_l, err_l):
+            q, scale, new_err = quantize_ef(g_l, err_l)
+            # all-gather int8 payloads + scales across pods, sum locally
+            q_all = jax.lax.all_gather(q, axis)            # (n, ...)
+            s_all = jax.lax.all_gather(scale, axis)        # (n,)
+            summed = jnp.tensordot(
+                s_all.astype(jnp.float32),
+                q_all.astype(jnp.float32),
+                axes=([0], [0]),
+            )
+            return (summed / n).astype(g_l.dtype), new_err
+
+        fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P()),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+        return fn(g, err)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_tree)
+    out = [leaf_sync(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = treedef.unflatten([o[0] for o in out])
+    new_e = treedef.unflatten([o[1] for o in out])
+    return new_g, new_e
+
+
+def dcn_bytes(grads, n_pods: int) -> Tuple[int, int]:
+    """(compressed, bf16-allreduce) DCN bytes per pod per step."""
+    elems = sum(int(g.size) for g in jax.tree.leaves(grads))
+    compressed = elems * 1 * (n_pods - 1) // n_pods + 4 * (n_pods - 1)
+    bf16_ar = 2 * elems * 2 * (n_pods - 1) // n_pods
+    return compressed, bf16_ar

@@ -1,0 +1,16 @@
+"""Cross-entropy LM loss (fp32, padded-vocab aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray, vocab_size: int):
+    """logits (B,S,Vp) fp32, labels (B,S) int32.  Returns (loss, n_tokens)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    valid = (labels >= 0) & (labels < vocab_size)
+    nll = jnp.where(valid, lse - ll, 0.0)
+    n = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / n, n

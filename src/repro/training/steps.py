@@ -1,0 +1,71 @@
+"""jit-able train / serve step functions (the units the dry-run lowers)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+from repro.training import optimizer as opt_mod
+from repro.training.loss import softmax_xent
+
+
+def loss_fn(params, cfg: ModelConfig, batch, mesh_info=None):
+    logits, aux = model_mod.forward(params, cfg, batch, mesh_info)
+    loss, n = softmax_xent(logits, batch["labels"], cfg.vocab_size)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux, "n_tokens": n}
+
+
+def train_step(
+    params, opt_state, batch, *, cfg: ModelConfig,
+    opt_cfg: opt_mod.AdamWConfig, mesh_info=None, microbatches: int = 1,
+):
+    """One optimizer step; optional gradient accumulation over microbatches."""
+    if microbatches == 1:
+        (tot, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch, mesh_info
+        )
+    else:
+        def micro(i):
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatches, a.shape[0] // microbatches) + a.shape[1:])[i],
+                batch,
+            )
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, cfg, mb, mesh_info)
+
+        def body(carry, i):
+            (tot, metrics), grads = micro(i)
+            acc_tot, acc_metrics, acc_grads = carry
+            acc_grads = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc_grads, grads)
+            return (acc_tot + tot, {k: acc_metrics[k] + metrics[k] for k in metrics}, acc_grads), None
+
+        zg = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        z_metrics = {"loss": 0.0, "aux_loss": 0.0, "n_tokens": 0}
+        (tot, metrics, grads), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), z_metrics, zg), jnp.arange(microbatches)
+        )
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        metrics = {k: v / microbatches for k, v in metrics.items()}
+
+    new_params, new_opt, om = opt_mod.apply_updates(params, grads, opt_state, opt_cfg)
+    metrics = dict(metrics)
+    metrics.update(om)
+    return new_params, new_opt, metrics
+
+
+def serve_step(params, cache, tokens, *, cfg: ModelConfig, mesh_info=None):
+    """One decode step: greedy next-token.  tokens (B,) -> (next (B,), logits, cache)."""
+    logits, cache = model_mod.decode_step(params, cfg, cache, tokens, mesh_info)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return nxt, logits, cache
+
+
+def prefill_step(params, batch, *, cfg: ModelConfig, max_len: int, mesh_info=None):
+    """Prompt ingestion: returns (first sampled token (B,), cache)."""
+    logits, cache = model_mod.prefill(params, cfg, batch, max_len, mesh_info)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return nxt, cache

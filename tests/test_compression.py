@@ -1,0 +1,85 @@
+"""Gradient compression: unbiasedness via error feedback + multi-device
+sync correctness + convergence parity."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training import compression as C
+
+
+def test_error_feedback_unbiased_over_steps():
+    """Accumulated quantized updates converge to the true sum (EF property)."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32) * 1e-3
+    err = jnp.zeros_like(g)
+    acc_q = jnp.zeros_like(g)
+    steps = 50
+    for _ in range(steps):
+        q, scale, err = C.quantize_ef(g, err)
+        acc_q = acc_q + C.dequantize(q, scale)
+    true = g * steps
+    rel = float(jnp.abs(acc_q - true).max() / jnp.abs(true).max())
+    assert rel < 0.01, rel
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    q, scale, err = C.quantize_ef(g, jnp.zeros_like(g))
+    deq = C.dequantize(q, scale)
+    assert float(jnp.abs(deq - g).max()) <= float(scale) * 0.5 + 1e-9
+    # EF captures exactly the residual
+    np.testing.assert_allclose(np.asarray(deq + err), np.asarray(g), atol=1e-6)
+
+
+def test_compressed_sync_multidevice():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.training import compression as C
+        mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(0)
+        # per-pod distinct gradients, laid out on the pod axis
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        g_all = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+
+        def per_pod(gp):
+            # simulate per-pod local grads via shard_map input
+            return gp
+
+        # run sync where each pod holds g_all[rank]
+        def body(g_l, e_l):
+            q, s, ne = C.quantize_ef(g_l[0], e_l[0])
+            q_all = jax.lax.all_gather(q, "pod")
+            s_all = jax.lax.all_gather(s, "pod")
+            out = jnp.tensordot(s_all, q_all.astype(jnp.float32), axes=([0],[0])) / 4
+            return out[None], ne[None]
+        fn = jax.shard_map(body, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                           out_specs=(P("pod"), P("pod")), check_vma=False)
+        err0 = jnp.zeros_like(g_all)
+        synced, err = fn(g_all, err0)
+        want = jnp.mean(g_all, axis=0)
+        got = np.asarray(synced)[0]
+        rel = np.abs(got - np.asarray(want)).max() / (np.abs(np.asarray(want)).max() + 1e-9)
+        assert rel < 0.02, rel
+        # every pod ends with the same value
+        assert np.allclose(np.asarray(synced), np.asarray(synced)[0], atol=1e-6)
+        print("COMPRESS_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=300,
+                       cwd=os.path.dirname(os.path.dirname(__file__)) or ".")
+    assert "COMPRESS_OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_dcn_bytes_accounting():
+    g = {"a": jnp.zeros((1000,)), "b": jnp.zeros((24,))}
+    comp, bf16 = C.dcn_bytes(g, 2)
+    assert comp < bf16 / 3   # ~4x fewer DCN bytes

