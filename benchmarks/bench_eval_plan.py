@@ -23,13 +23,16 @@ REGIMES = [
 ]
 
 
-def run(n_test: int = 12) -> List[Dict]:
-    train_eps = make_episodes(WorkloadConfig(seed=1, n_episodes=60))
+def run(n_test: int = 12, smoke: bool = False) -> List[Dict]:
+    if smoke:
+        n_test = 3
+    train_eps = make_episodes(WorkloadConfig(seed=1, n_episodes=20 if smoke else 60))
     engine = PatternEngine(context_len=2, min_support=3).fit(
         episodes_to_traces(train_eps))
     test_eps = make_episodes(WorkloadConfig(seed=42, n_episodes=n_test))
     rows = []
-    for regime, machine, conc in REGIMES:
+    regimes = REGIMES[:2] if smoke else REGIMES
+    for regime, machine, conc in regimes:
         base = None
         for mode in ("serial", "bpaste", "parallel"):
             t0 = time.perf_counter()
@@ -49,7 +52,8 @@ def run(n_test: int = 12) -> List[Dict]:
                     f"promo_rate={s['promotions']/n_steps:.2f} "
                     f"prefix_rate={s['prefix_reuses']/n_steps:.2f} "
                     f"waste={s['wasted_frac']:.2f} qos={s['qos_violations']} "
-                    f"slow={s['mean_auth_slowdown']:.3f}"
+                    f"slow={s['mean_auth_slowdown']:.3f} "
+                    f"sched_us={s['sched_us_per_admit']:.0f}"
                 ),
             })
     return rows

@@ -51,6 +51,15 @@ def run() -> List[Dict]:
     rows.append({"name": "scheduler/greedy_admit_k8", "us_per_call": dt * 1e6,
                  "derived": f"admitted={len(res.admitted)}"})
 
+    pb = scoring.pack_beam(hyps, admission.bucket_k(len(hyps), sc.k_max), sc.n_max)
+    admission.fused_admit(hyps, sc, slack, budget, adm, packed=pb)  # warm jit
+    t0 = time.perf_counter()
+    for _ in range(50):
+        res_f = admission.fused_admit(hyps, sc, slack, budget, adm, packed=pb)
+    dt = (time.perf_counter() - t0) / 50
+    rows.append({"name": "scheduler/fused_admit_k8", "us_per_call": dt * 1e6,
+                 "derived": f"admitted={len(res_f.admitted)} (one XLA dispatch/pass)"})
+
     g = sum(res.eu.values())
     _, ex = admission.exact_admit(hyps[:6], sc, slack, budget, adm)
     res6 = admission.greedy_admit(hyps[:6], sc, slack, budget, adm)

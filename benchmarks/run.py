@@ -1,24 +1,49 @@
 """Benchmark entrypoint: one section per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV."""
+Prints ``name,us_per_call,derived`` CSV.
+
+``--smoke`` runs a minutes-scale sanity pass (scheduler + admission + a
+reduced eval plan) for the tier-1 loop; the full suite is the default.
+``--only SECTION`` filters sections by substring.
+"""
 from __future__ import annotations
 
+import argparse
 import sys
 
 
 def main() -> None:
-    from benchmarks import (bench_ablation, bench_eval_plan, bench_kernels,
-                            bench_scheduler, bench_serving, bench_table1,
-                            roofline)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast sanity pass: scheduler, admission, reduced eval plan")
+    ap.add_argument("--only", default=None,
+                    help="run only sections whose name contains this substring")
+    args = ap.parse_args()
 
-    sections = [
-        ("table1 (paper Table 1: end-to-end speedup)", bench_table1.run),
-        ("eval_plan (paper SS9 metrics)", bench_eval_plan.run),
-        ("ablation (EU objective / beam width)", bench_ablation.run),
-        ("scheduler (runtime overhead)", bench_scheduler.run),
-        ("serving (B-PASTE x engine integration)", bench_serving.run),
-        ("kernels", bench_kernels.run),
-        ("roofline (dry-run derived)", roofline.run),
-    ]
+    from benchmarks import (bench_ablation, bench_admission, bench_eval_plan,
+                            bench_kernels, bench_scheduler, bench_serving,
+                            bench_table1, roofline)
+
+    if args.smoke:
+        sections = [
+            ("scheduler (runtime overhead)", bench_scheduler.run),
+            ("admission (fused vs reference)",
+             lambda: bench_admission.run(smoke=True)),
+            ("eval_plan (paper SS9 metrics, smoke)",
+             lambda: bench_eval_plan.run(smoke=True)),
+        ]
+    else:
+        sections = [
+            ("table1 (paper Table 1: end-to-end speedup)", bench_table1.run),
+            ("eval_plan (paper SS9 metrics)", bench_eval_plan.run),
+            ("ablation (EU objective / beam width)", bench_ablation.run),
+            ("scheduler (runtime overhead)", bench_scheduler.run),
+            ("admission (fused vs reference)", bench_admission.run),
+            ("serving (B-PASTE x engine integration)", bench_serving.run),
+            ("kernels", bench_kernels.run),
+            ("roofline (dry-run derived)", roofline.run),
+        ]
+    if args.only:
+        sections = [(t, f) for t, f in sections if args.only in t]
     print("name,us_per_call,derived")
     for title, fn in sections:
         print(f"# --- {title} ---", file=sys.stderr)

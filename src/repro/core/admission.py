@@ -4,22 +4,55 @@ subject to Σρ ≤ min(R_slack, B).
 Primary policy is the paper's greedy (Algorithm 1 line 20): repeatedly admit
 the highest-marginal-EU prefix that still fits, re-scoring interference
 after each admission (EU is conditioned on the admitted set, so marginals
-change).  ``exact_admit`` enumerates all subsets (K ≤ ~14) and is used by
-tests to bound the greedy gap and by the benchmark to report solution
-quality.
+change).
+
+``fused_admit`` is the production path: the whole greedy selection —
+score → pick the argmax-EU candidate that fits → add its ρ to the admitted
+demand → re-score — runs inside one jitted ``jax.lax.while_loop`` over the
+padded PackedBeam tables, so an admission pass is a single XLA dispatch
+(the scheduler must not eat the slack it exploits; see DESIGN.md).  The
+admitted-set-invariant terms ΔO/ΔU are hoisted out of the loop; only ΔI is
+re-evaluated per admission.  Beams wider than ``k_max`` are padded up to the
+next ``k_max`` multiple (bucketed shapes → bounded jit cache) instead of
+being truncated.
+
+``greedy_admit`` is kept as the reference oracle — a numpy greedy loop
+around the jitted scorer, dispatching per iteration (equivalence tests in
+tests/test_admission_fused.py; the only dispatch-free implementation is
+``_admit_numpy``, the small-beam fast path).  ``exact_admit`` enumerates
+all subsets (K ≤ ~14) and is used by tests to bound the greedy gap and by
+the benchmark to report solution quality.
 """
 from __future__ import annotations
 
+import functools
 import itertools
+import math
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.events import RESOURCE_DIMS
 from repro.core.hypothesis import BranchHypothesis
 from repro.core.interference import Machine
-from repro.core.scoring import Scorer
+from repro.core.scoring import (
+    PackedBeam, Scorer, eu_given_admitted, pack_beam, static_gain_terms,
+)
+
+
+# capacity-fit tolerance, shared by every admission path (reference, exact,
+# fused kernel, numpy fast path) so they agree at the constraint boundary
+_FIT_EPS = 1e-6
+
+
+def _fit_limit(limit):
+    """Per-dimension fit threshold: relative + absolute slop so the jitted
+    kernel's f32 accumulation (error ∝ magnitude) can't flip a boundary
+    decision against the f64 paths."""
+    return limit + _FIT_EPS * (1.0 + limit)
 
 
 def _prefix_rho(h: BranchHypothesis) -> np.ndarray:
@@ -44,23 +77,28 @@ def greedy_admit(
     authoritative_rho: np.ndarray,
     idle_window: float = 10.0,
 ) -> AdmissionResult:
+    """Reference greedy: scoring dispatches (one per k_max chunk) + numpy
+    re-pack PER admission iteration.  Semantics oracle for ``fused_admit``;
+    prefer the fused path in hot loops."""
     limit = np.minimum(slack, budget)
     admitted: List[BranchHypothesis] = []
     admitted_demand = np.zeros(RESOURCE_DIMS)
     eu_at_admit: dict = {}
     remaining = list(hyps)
     while remaining:
-        eu, pb, _ = scorer.score(
+        # score_all chunks beams wider than scorer.k_max — every remaining
+        # hypothesis gets a real EU, not the padded-table truncation
+        eu = scorer.score_all(
             remaining, authoritative_rho + admitted_demand, idle_window
         )
-        order = np.argsort(-eu[: len(remaining)])
+        order = np.argsort(-eu)
         picked = None
         for oi in order:
             if eu[oi] <= 0:
                 break
             cand = remaining[oi]
             rho = _prefix_rho(cand)
-            if np.all(admitted_demand + rho <= limit + 1e-9):
+            if np.all(admitted_demand + rho <= _fit_limit(limit)):
                 picked = (oi, cand, float(eu[oi]), rho)
                 break
         if picked is None:
@@ -71,6 +109,163 @@ def greedy_admit(
         admitted_demand = admitted_demand + rho
         remaining.pop(oi)
     return AdmissionResult(admitted, eu_at_admit, remaining)
+
+
+def bucket_k(n: int, k_max: int) -> int:
+    """Smallest multiple of k_max holding n hypotheses (≥ k_max).
+
+    Bucketing keeps the fused kernel's compiled-shape set bounded while
+    never dropping candidates: a 12-wide beam with k_max=8 packs at K=16."""
+    return max(k_max, k_max * math.ceil(n / max(k_max, 1)))
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes",))
+def admit_beam(
+    node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid,
+    auth_rho, cap, limit, lam, mu, idle_window, n_nodes: int,
+):
+    """Entire greedy admission pass as ONE jitted kernel.
+
+    State of the ``while_loop``: (remaining mask, admitted mask, admitted
+    demand, EU-at-admit, continue flag).  Each iteration scores every
+    still-remaining hypothesis against the current admitted demand, picks
+    the argmax-EU candidate with positive EU whose prefix ρ fits under
+    ``limit``, and folds its demand in.  Terminates when nothing eligible
+    remains — at most K+1 iterations, all inside XLA.
+
+    ΔO/ΔU are loop-invariant (they depend only on the hypothesis graph), so
+    they are computed once up front; the loop re-evaluates only ΔI.
+
+    Returns (admitted_mask (K,), eu_at_admit (K,), admitted_demand (R,)).
+    """
+    l_solo, delta_o, delta_u = static_gain_terms(
+        node_lat, node_prob, node_mask, prefix_mask, adj, idle_window, n_nodes
+    )
+    fit_lim = _fit_limit(limit)
+    K = q.shape[0]
+
+    def cond(state):
+        return state[4]
+
+    def body(state):
+        remaining, admitted, demand, eu_adm, _ = state
+        eu, _ = eu_given_admitted(
+            l_solo, delta_o, delta_u, q, rho, k_valid,
+            auth_rho + demand, cap, lam, mu, idle_window,
+        )
+        fits = jnp.all(demand[None, :] + rho <= fit_lim[None, :], axis=1)
+        elig = (remaining > 0) & fits & (eu > 0.0)
+        any_elig = jnp.any(elig)
+        pick = jnp.argmax(jnp.where(elig, eu, -jnp.inf))
+        onehot = (jnp.arange(K) == pick) & any_elig
+        remaining = jnp.where(onehot, 0.0, remaining)
+        admitted = jnp.where(onehot, 1.0, admitted)
+        eu_adm = jnp.where(onehot, eu, eu_adm)
+        demand = demand + (onehot[:, None] * rho).sum(axis=0)
+        return (remaining, admitted, demand, eu_adm, any_elig)
+
+    init = (
+        k_valid,
+        jnp.zeros((K,)),
+        jnp.zeros_like(auth_rho),
+        jnp.zeros((K,)),
+        jnp.array(True),
+    )
+    _, admitted, demand, eu_adm, _ = jax.lax.while_loop(cond, body, init)
+    return admitted, eu_adm, demand
+
+
+def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
+                 idle_window) -> Tuple[np.ndarray, np.ndarray]:
+    """The ``admit_beam`` algorithm on the same PackedBeam tables in pure
+    numpy — the host-side fast path for tiny beams, where a single XLA
+    dispatch (~1 ms on CPU) dwarfs the actual arithmetic.  The Eq. 3
+    estimator is the shared ``eu_given_admitted`` (with ``xp=np``); only the
+    static ΔO/ΔU terms are recomputed here (the jitted ``_critical_path``
+    would itself be a dispatch).  Returns (admitted_mask (K,),
+    eu_at_admit (K,))."""
+    lat, prob = packed.node_lat, packed.node_prob
+    mask, pmask, adj = packed.node_mask, packed.prefix_mask, packed.adj
+    q, rho, k_valid = packed.q, packed.rho, packed.k_valid
+    K, N = lat.shape
+    l_solo = (lat * pmask).sum(axis=1)
+    delta_o = np.minimum(l_solo, idle_window)
+    post_mask = mask * (1.0 - pmask)
+    exp_lat = lat * prob * post_mask
+    dist = exp_lat.copy()
+    for _ in range(N):                          # masked longest-path relaxation
+        via = np.max(adj * (dist[:, :, None] + exp_lat[:, None, :]), axis=1)
+        dist = np.maximum(dist, via * (post_mask > 0))
+    delta_u = dist.max(axis=1)
+
+    fit_lim = _fit_limit(limit)
+    remaining = k_valid.copy()
+    admitted = np.zeros(K)
+    demand = np.zeros_like(np.asarray(auth_rho, float))
+    eu_adm = np.zeros(K)
+    while True:
+        eu, _ = eu_given_admitted(
+            l_solo, delta_o, delta_u, q, rho, k_valid,
+            auth_rho + demand, cap, lam, mu, idle_window, xp=np,
+        )
+        fits = np.all(demand[None, :] + rho <= fit_lim[None, :], axis=1)
+        elig = (remaining > 0) & fits & (eu > 0.0)
+        if not elig.any():
+            return admitted, eu_adm
+        pick = int(np.argmax(np.where(elig, eu, -np.inf)))
+        remaining[pick] = 0.0
+        admitted[pick] = 1.0
+        eu_adm[pick] = eu[pick]
+        demand = demand + rho[pick]
+
+
+def fused_admit(
+    hyps: Sequence[BranchHypothesis],
+    scorer: Scorer,
+    slack: np.ndarray,
+    budget: np.ndarray,
+    authoritative_rho: np.ndarray,
+    idle_window: float = 10.0,
+    packed: Optional[PackedBeam] = None,
+    small_beam_threshold: int = 2,
+) -> AdmissionResult:
+    """Greedy admission via the fused ``admit_beam`` kernel: one XLA dispatch
+    per admission pass (vs. one scoring dispatch per *iteration* in
+    ``greedy_admit``).  Beams of ≤ ``small_beam_threshold`` hypotheses take
+    an equivalent pure-numpy path instead — below that size the fixed cost
+    of any device dispatch exceeds the whole computation.  ``packed`` lets
+    callers reuse a cached PackedBeam (see BPasteRuntime incremental
+    packing); it must have been packed from exactly these ``hyps`` at a
+    bucketed K ≥ len(hyps)."""
+    if not len(hyps):
+        return AdmissionResult([], {}, [])
+    limit = np.minimum(slack, budget)
+    if packed is None or packed.q.shape[0] < len(hyps):
+        packed = pack_beam(hyps, bucket_k(len(hyps), scorer.k_max), scorer.n_max)
+    cap = scorer.machine.cap_array()
+    if len(hyps) <= small_beam_threshold:
+        admitted_mask, eu_adm = _admit_numpy(
+            packed, np.asarray(authoritative_rho, float), cap,
+            np.asarray(limit, float), scorer.lam, scorer.mu, idle_window,
+        )
+    else:
+        admitted_mask, eu_adm, _ = admit_beam(
+            packed.node_lat, packed.node_prob, packed.node_mask,
+            packed.prefix_mask, packed.adj, packed.q, packed.rho, packed.k_valid,
+            jnp.asarray(authoritative_rho), jnp.asarray(cap),
+            jnp.asarray(limit), scorer.lam, scorer.mu, idle_window,
+            n_nodes=scorer.n_max,
+        )
+        admitted_mask = np.asarray(admitted_mask)
+        eu_adm = np.asarray(eu_adm)
+    admitted, rejected, eu = [], [], {}
+    for i, h in enumerate(hyps):
+        if admitted_mask[i] > 0:
+            admitted.append(h)
+            eu[h.hid] = float(eu_adm[i])
+        else:
+            rejected.append(h)
+    return AdmissionResult(admitted, eu, rejected)
 
 
 def exact_admit(
@@ -89,7 +284,7 @@ def exact_admit(
     for r in range(1, n + 1):
         for subset in itertools.combinations(range(n), r):
             demand = np.sum([rhos[i] for i in subset], axis=0)
-            if not np.all(demand <= limit + 1e-9):
+            if not np.all(demand <= _fit_limit(limit)):
                 continue
             # EU of each member conditioned on the OTHERS in the subset
             total = 0.0

@@ -32,7 +32,9 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.admission import greedy_admit
+import time
+
+from repro.core.admission import bucket_k, fused_admit, greedy_admit
 from repro.core.events import (
     DEFAULT_TOOLS, RESOURCE_DIMS, Event, ResourceVector, SafetyLevel, ToolSpec,
 )
@@ -42,7 +44,7 @@ from repro.core.interference import Machine
 from repro.core.patterns import PatternEngine
 from repro.core.safety import EligibilityPolicy, FULL_POLICY
 from repro.core.sandbox import AgentState, Sandbox
-from repro.core.scoring import Scorer
+from repro.core.scoring import PackedBeam, Scorer, pack_beam
 from repro.core.simulator import SimJob, Simulator
 from repro.core.workload import Episode
 
@@ -86,11 +88,17 @@ class EpisodeState:
     last_writes: set = field(default_factory=set)
     hyp_runs: List[HypRun] = field(default_factory=list)
     auth_queue: List[SimJob] = field(default_factory=list)
+    # incremental beam packing: PackedBeam reused across ticks while the
+    # candidate beam (hypothesis ids + node statuses) is unchanged
+    packed_beam: Optional[PackedBeam] = None
+    packed_sig: Optional[Tuple] = None
 
 
 @dataclass
 class RuntimeConfig:
     mode: str = "bpaste"
+    admission: str = "fused"      # "fused" (one-dispatch admit_beam kernel)
+                                  # | "reference" (per-iteration greedy oracle)
     beam_k: int = 6
     max_nodes: int = 12
     lam: float = 0.5
@@ -116,6 +124,11 @@ class Metrics:
     spec_solo_seconds: float = 0.0
     qos_violations: int = 0
     auth_slowdown_samples: List[float] = field(default_factory=list)
+    # scheduler self-overhead: wall time burned inside admission per tick
+    sched_admit_calls: int = 0
+    sched_admit_seconds: float = 0.0
+    sched_pack_hits: int = 0
+    sched_pack_misses: int = 0
 
     def summary(self) -> Dict[str, float]:
         lat = np.array(self.episode_latencies) if self.episode_latencies else np.zeros(1)
@@ -133,6 +146,15 @@ class Metrics:
             "qos_violations": self.qos_violations,
             "mean_auth_slowdown": float(np.mean(self.auth_slowdown_samples))
             if self.auth_slowdown_samples else 1.0,
+            "sched_admit_calls": self.sched_admit_calls,
+            "sched_us_per_admit": (
+                self.sched_admit_seconds * 1e6 / self.sched_admit_calls
+                if self.sched_admit_calls else 0.0
+            ),
+            "sched_pack_hit_rate": (
+                self.sched_pack_hits
+                / max(self.sched_pack_hits + self.sched_pack_misses, 1)
+            ),
         }
 
 
@@ -146,6 +168,10 @@ class BPasteRuntime:
         rcfg: RuntimeConfig = RuntimeConfig(),
         tools: Dict[str, ToolSpec] = DEFAULT_TOOLS,
     ):
+        if rcfg.admission not in ("fused", "reference"):
+            raise ValueError(
+                f"RuntimeConfig.admission must be 'fused' or 'reference', "
+                f"got {rcfg.admission!r}")
         self.machine = machine
         self.policy = policy
         self.rcfg = rcfg
@@ -556,6 +582,23 @@ class BPasteRuntime:
             active.append(hr)
             have.add(key)
 
+    def _packed_for(self, es: EpisodeState, cand: List[HypRun]) -> PackedBeam:
+        """Incremental beam packing: re-pack only when the candidate beam
+        actually changed, otherwise reuse the cached PackedBeam — beams are
+        stable across most ticks.  The ordered hid tuple fully determines
+        the packed tables: hids are globally unique and BranchHypothesis is
+        immutable after build (node statuses live on NodeRun, which
+        pack_beam never reads)."""
+        sig = tuple(hr.hyp.hid for hr in cand)
+        if es.packed_sig == sig and es.packed_beam is not None:
+            self.metrics.sched_pack_hits += 1
+            return es.packed_beam
+        self.metrics.sched_pack_misses += 1
+        k = bucket_k(len(cand), self.scorer.k_max)
+        es.packed_beam = pack_beam([hr.hyp for hr in cand], k, self.scorer.n_max)
+        es.packed_sig = sig
+        return es.packed_beam
+
     def _admit(self, es: EpisodeState):
         cand = [hr for hr in es.hyp_runs
                 if hr.status == "active" and self._next_launchable(hr) is not None
@@ -572,10 +615,20 @@ class BPasteRuntime:
                 hr.meta_admitted = True
             return
         hyps = [hr.hyp for hr in cand]
-        res = greedy_admit(
-            hyps, self.scorer, slack, self.rcfg.budget.as_array(), auth_rho,
-            idle_window=self.rcfg.idle_window,
-        )
+        t0 = time.perf_counter()
+        if self.rcfg.admission == "reference":
+            res = greedy_admit(
+                hyps, self.scorer, slack, self.rcfg.budget.as_array(), auth_rho,
+                idle_window=self.rcfg.idle_window,
+            )
+        else:
+            res = fused_admit(
+                hyps, self.scorer, slack, self.rcfg.budget.as_array(), auth_rho,
+                idle_window=self.rcfg.idle_window,
+                packed=self._packed_for(es, cand),
+            )
+        self.metrics.sched_admit_seconds += time.perf_counter() - t0
+        self.metrics.sched_admit_calls += 1
         admitted_ids = {h.hid: res.eu[h.hid] for h in res.admitted}
         for hr in cand:
             if hr.hyp.hid in admitted_ids:

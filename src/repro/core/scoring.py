@@ -92,6 +92,47 @@ def _critical_path(adj, lat, mask, n_iters: int):
     return dist.max(axis=1)
 
 
+def static_gain_terms(node_lat, node_prob, node_mask, prefix_mask, adj,
+                      idle_window, n_nodes: int):
+    """Per-hypothesis terms independent of the admitted set: prefix solo
+    latency, ΔO (idle-window-capped), and ΔU (post-prefix critical path).
+
+    Traceable helper shared by ``score_beam`` and the fused admission kernel
+    — the latter hoists these out of its while_loop since only ΔI depends on
+    the admitted demand."""
+    l_solo = (node_lat * prefix_mask).sum(axis=1)
+    delta_o = jnp.minimum(l_solo, idle_window)
+    post_mask = node_mask * (1.0 - prefix_mask)
+    exp_lat = node_lat * node_prob
+    delta_u = _critical_path(adj, exp_lat, post_mask, n_iters=n_nodes)
+    return l_solo, delta_o, delta_u
+
+
+def eu_given_admitted(l_solo, delta_o, delta_u, q, rho, k_valid,
+                      admitted_rho, cap, lam, mu, idle_window, xp=jnp):
+    """EU (Eq. 3) for every hypothesis conditioned on the admitted demand.
+
+    Only ΔI varies with the admitted set; the static terms come from
+    ``static_gain_terms``.  ``xp`` selects the array backend — jnp inside
+    the jitted kernels, np for the host-side small-beam fast path — so the
+    estimator has exactly one implementation.  Returns (eu (K,),
+    delta_i (K,))."""
+    # ΔI: bottleneck stretch of prefix under admitted demand + inflicted
+    util = (admitted_rho[None, :] + rho) / cap[None, :]          # (K,R)
+    stretch = xp.where(rho > 0, xp.maximum(util, 1.0), 1.0).max(axis=1)
+    self_pen = l_solo * (stretch - 1.0)
+    # inflicted on admitted set: admitted work stretched by new util
+    adm_util = admitted_rho / cap
+    adm_stretch_before = xp.maximum(adm_util, 1.0).max()
+    adm_stretch_after = xp.where(
+        admitted_rho[None, :] > 0, xp.maximum(util, 1.0), 1.0
+    ).max(axis=1)
+    inflicted = xp.maximum(adm_stretch_after - adm_stretch_before, 0.0) * idle_window
+    delta_i = self_pen + inflicted
+    eu = q * (delta_o + lam * delta_u - mu * delta_i) * k_valid
+    return eu, delta_i
+
+
 @functools.partial(jax.jit, static_argnames=("n_nodes",))
 def score_beam(
     node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid,
@@ -100,26 +141,13 @@ def score_beam(
     """Vectorized EU for every hypothesis given the admitted demand.
 
     Returns (eu (K,), delta_o, delta_u, delta_i)."""
-    # ΔO: solo latency of the prefix, capped by the idle window estimate
-    l_solo = (node_lat * prefix_mask).sum(axis=1)
-    delta_o = jnp.minimum(l_solo, idle_window)
-    # ΔU: critical path of the post-prefix remainder, probability-weighted
-    post_mask = node_mask * (1.0 - prefix_mask)
-    exp_lat = node_lat * node_prob
-    delta_u = _critical_path(adj, exp_lat, post_mask, n_iters=n_nodes)
-    # ΔI: bottleneck stretch of prefix under admitted demand + inflicted
-    util = (admitted_rho[None, :] + rho) / cap[None, :]          # (K,R)
-    stretch = jnp.where(rho > 0, jnp.maximum(util, 1.0), 1.0).max(axis=1)
-    self_pen = l_solo * (stretch - 1.0)
-    # inflicted on admitted set: admitted work stretched by new util
-    adm_util = admitted_rho / cap
-    adm_stretch_before = jnp.maximum(adm_util, 1.0).max()
-    adm_stretch_after = jnp.where(
-        admitted_rho[None, :] > 0, jnp.maximum(util, 1.0), 1.0
-    ).max(axis=1)
-    inflicted = jnp.maximum(adm_stretch_after - adm_stretch_before, 0.0) * idle_window
-    delta_i = self_pen + inflicted
-    eu = q * (delta_o + lam * delta_u - mu * delta_i) * k_valid
+    l_solo, delta_o, delta_u = static_gain_terms(
+        node_lat, node_prob, node_mask, prefix_mask, adj, idle_window, n_nodes
+    )
+    eu, delta_i = eu_given_admitted(
+        l_solo, delta_o, delta_u, q, rho, k_valid, admitted_rho, cap,
+        lam, mu, idle_window,
+    )
     return eu, delta_o, delta_u, delta_i
 
 
@@ -149,3 +177,24 @@ class Scorer:
             "delta_i": np.asarray(di),
         }
         return np.asarray(eu), pb, detail
+
+    def score_all(
+        self,
+        hyps: Sequence[BranchHypothesis],
+        admitted_rho: np.ndarray,
+        idle_window: float = 10.0,
+    ) -> np.ndarray:
+        """EU for EVERY hypothesis, chunked over ``k_max``-sized beams.
+
+        ``score`` silently truncates beams wider than ``k_max`` (the padded
+        tables only hold the first K rows); this scores len(hyps) entries by
+        chunking.  Exact: EU has no cross-hypothesis coupling — ΔI depends
+        only on the candidate's own ρ and the (shared) admitted demand."""
+        if not len(hyps):
+            return np.zeros(0)
+        out = []
+        for i in range(0, len(hyps), self.k_max):
+            chunk = hyps[i:i + self.k_max]
+            eu, _, _ = self.score(chunk, admitted_rho, idle_window)
+            out.append(eu[: len(chunk)])
+        return np.concatenate(out)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -134,7 +136,7 @@ def decode_attention_pallas(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b, kv, grp, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pltpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -191,7 +193,7 @@ def decode_attention_partials_pallas(
             jax.ShapeDtypeStruct((b, kv, grp, 1), jnp.float32),
             jax.ShapeDtypeStruct((b, kv, grp, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pltpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -11,13 +11,13 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: Optional[int] = None):
@@ -25,10 +25,7 @@ def make_local_mesh(model_parallel: Optional[int] = None):
     n = len(jax.devices())
     mp = model_parallel or 1
     assert n % mp == 0
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return compat.make_mesh((n // mp, mp), ("data", "model"))
 
 
 def mesh_axes(mesh) -> Tuple[Tuple[str, ...], str]:

@@ -5,6 +5,7 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.models.common import apply_rope, dense_init, split_keys
@@ -261,14 +262,14 @@ def attn_decode_sharded(
         in_specs += [P(b_ax, ma, None), P(b_ax, ma, None),   # ks, vs caches
                      P(b_ax, None), P(b_ax, None)]           # new scales
         out_specs += [P(b_ax, ma, None), P(b_ax, ma, None)]
-        fn = jax.shard_map(body, mesh=mesh_info.mesh, in_specs=tuple(in_specs),
-                           out_specs=tuple(out_specs), check_vma=False)
+        fn = compat.shard_map(body, mesh=mesh_info.mesh, in_specs=tuple(in_specs),
+                              out_specs=tuple(out_specs))
         o, kq_c, vq_c, ks_c, vs_c = fn(qg, knq, vnq, kq_c, vq_c, slot, eff_len,
                                        ks_c, vs_c, kns, vns)
         out = o.reshape(b, 1, H * hd) @ p["wo"]
         return out, (kq_c, ks_c), (vq_c, vs_c)
-    fn = jax.shard_map(body, mesh=mesh_info.mesh, in_specs=tuple(in_specs),
-                       out_specs=tuple(out_specs), check_vma=False)
+    fn = compat.shard_map(body, mesh=mesh_info.mesh, in_specs=tuple(in_specs),
+                          out_specs=tuple(out_specs))
     o, k_cache, v_cache = fn(qg, k_new, v_new, k_cache, v_cache, slot, eff_len)
     out = o.reshape(b, 1, H * hd) @ p["wo"]
     return out, k_cache, v_cache

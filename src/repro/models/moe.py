@@ -22,6 +22,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.models.common import dense_init, split_keys
 
@@ -178,12 +179,11 @@ def moe_forward(
             drop = (1.0 - jax.lax.pmean(aux["kept"], ma) / aux["slots"]).reshape(1)
             return y, lb, drop
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body,
         mesh=mesh_info.mesh,
         in_specs=(w_spec, x_spec),
         out_specs=(x_spec, P(batch), P(batch)),
-        check_vma=False,
     )
     y, lb, drop = fn(p, x)
     return y, {"lb_loss": lb.mean(), "drop_frac": drop.mean()}

@@ -22,6 +22,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def init_error_feedback(grads):
     return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
@@ -63,11 +65,10 @@ def compressed_grad_sync(grads, err_tree, mesh, axis: str = "pod"):
             )
             return (summed / n).astype(g_l.dtype), new_err
 
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             body, mesh=mesh,
             in_specs=(P(), P()),
             out_specs=(P(), P()),
-            check_vma=False,
         )
         return fn(g, err)
 

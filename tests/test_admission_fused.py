@@ -1,0 +1,200 @@
+"""Fused admission (one-dispatch ``admit_beam``) vs. the numpy reference
+greedy: identical admitted sets, matching EU-at-admit, bounded gap to the
+exact optimum, and the wide-beam (> k_max) truncation regression."""
+import numpy as np
+import pytest
+
+from repro.core import admission, scoring
+from repro.core.events import DEFAULT_TOOLS, RESOURCE_DIMS
+from repro.core.hypothesis import BranchHypothesis, Node, NodeKind
+from repro.core.interference import Machine
+
+READ_TOOLS = ["grep", "read", "parse", "search", "fetch", "visit"]
+
+
+def _mk_hyp(hid, tools, q=0.8):
+    nodes, edges = [], []
+    for i, t in enumerate(tools):
+        spec = DEFAULT_TOOLS[t]
+        nodes.append(Node(i, NodeKind.TOOL, t, spec.level, spec.rho,
+                          spec.base_latency))
+        if i:
+            edges.append((i - 1, i))
+    return BranchHypothesis(hid, nodes, edges, q, context_key=("x",))
+
+
+def _random_beam(rng, k):
+    hyps = []
+    for hid in range(k):
+        depth = int(rng.integers(1, 5))
+        tools = [READ_TOOLS[int(rng.integers(0, len(READ_TOOLS)))]
+                 for _ in range(depth)]
+        q = float(rng.uniform(0.1, 0.95))
+        hyps.append(_mk_hyp(hid, tools, q=q))
+    return hyps
+
+
+def _assert_equivalent(ref, fus, hyps):
+    assert sorted(h.hid for h in ref.admitted) == sorted(h.hid for h in fus.admitted), (
+        f"admitted sets differ: ref={[h.hid for h in ref.admitted]} "
+        f"fused={[h.hid for h in fus.admitted]}"
+    )
+    for hid, val in ref.eu.items():
+        np.testing.assert_allclose(fus.eu[hid], val, rtol=1e-4, atol=1e-4)
+    assert len(ref.rejected) == len(fus.rejected)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5, 6, 7])
+@pytest.mark.parametrize("k", [3, 5, 8])
+def test_fused_matches_reference_randomized(seed, k):
+    rng = np.random.default_rng(seed)
+    sc = scoring.Scorer(Machine())
+    hyps = _random_beam(rng, k)
+    # slack/budget away from exact feasibility boundaries (f32 vs f64)
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    ref = admission.greedy_admit(hyps, sc, slack, budget, auth)
+    fus = admission.fused_admit(hyps, sc, slack, budget, auth)
+    _assert_equivalent(ref, fus, hyps)
+
+
+def test_fused_respects_budget():
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_hyp(i, ["test"]) for i in range(4)]   # cpu=2 each
+    slack = np.array([12.0, 100.0, 500.0, 1.0])
+    budget = np.array([4.0, 100.0, 500.0, 1.0])       # only 2 test jobs fit
+    res = admission.fused_admit(hyps, sc, slack, budget, np.zeros(4))
+    assert 0 < len(res.admitted) <= 2
+    total = sum(admission._prefix_rho(h) for h in res.admitted)
+    assert np.all(np.asarray(total) <= budget + 1e-6)
+
+
+def test_fused_close_to_exact():
+    """Fused greedy stays within the same gap bound as the reference."""
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_hyp(i, t) for i, t in enumerate(
+        [["grep", "read"], ["search", "visit"], ["test"], ["parse"]])]
+    slack = np.array([6.0, 50.0, 200.0, 1.0])
+    budget = np.array([6.0, 50.0, 200.0, 1.0])
+    res = admission.fused_admit(hyps, sc, slack, budget, np.zeros(4))
+    fused_total = sum(res.eu.values())
+    _, exact_total = admission.exact_admit(hyps, sc, slack, budget, np.zeros(4))
+    assert fused_total >= 0.6 * exact_total
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("k", [1, 2])
+def test_small_beam_numpy_path_matches_reference(seed, k):
+    """Beams at/below small_beam_threshold run host-side numpy; decisions
+    must still match the reference greedy."""
+    rng = np.random.default_rng(100 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = _random_beam(rng, k)
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    ref = admission.greedy_admit(hyps, sc, slack, budget, auth)
+    fus = admission.fused_admit(hyps, sc, slack, budget, auth)
+    _assert_equivalent(ref, fus, hyps)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_numpy_path_matches_kernel_path(seed):
+    """Force the same beam through both fused implementations: the numpy
+    fast path and the jitted while_loop kernel must agree."""
+    rng = np.random.default_rng(200 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = _random_beam(rng, 6)
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    via_np = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                   small_beam_threshold=len(hyps))
+    via_krn = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                    small_beam_threshold=0)
+    _assert_equivalent(via_np, via_krn, hyps)
+
+
+def test_boundary_fit_large_magnitude():
+    """Non-dyadic demands at io-dimension scale, limit at the exact-fit
+    boundary: the f32 kernel, the numpy path, and the f64 reference must
+    agree (relative fit tolerance; absolute slop alone is too tight at
+    magnitude ~150)."""
+    from repro.core.events import ResourceVector, SafetyLevel, ToolSpec
+    spec = ToolSpec("io_heavy", SafetyLevel.READ_ONLY,
+                    ResourceVector(0.5, 1.0, 49.9, 0), 2.0)
+    sc = scoring.Scorer(Machine())
+    hyps = []
+    for hid in range(4):
+        n = Node(0, NodeKind.TOOL, "io_heavy", spec.level, spec.rho,
+                 spec.base_latency)
+        hyps.append(BranchHypothesis(hid, [n], [], 0.9 - 0.1 * hid,
+                                     context_key=("x",)))
+    slack = np.array([12.0, 100.0, 500.0, 1.0])
+    budget = np.array([12.0, 100.0, 149.7, 1.0])   # exactly 3 * 49.9
+    ref = admission.greedy_admit(hyps, sc, slack, budget, np.zeros(4))
+    krn = admission.fused_admit(hyps, sc, slack, budget, np.zeros(4),
+                                small_beam_threshold=0)
+    npy = admission.fused_admit(hyps, sc, slack, budget, np.zeros(4),
+                                small_beam_threshold=len(hyps))
+    assert len(ref.admitted) == 3
+    _assert_equivalent(ref, krn, hyps)
+    _assert_equivalent(ref, npy, hyps)
+
+
+def test_fused_empty_beam():
+    sc = scoring.Scorer(Machine())
+    res = admission.fused_admit([], sc, np.ones(4), np.ones(4), np.zeros(4))
+    assert res.admitted == [] and res.rejected == []
+
+
+# ======================================================================
+# Wide-beam truncation regression (k_max silently dropped hypotheses)
+# ======================================================================
+
+def test_wide_beam_scores_every_hypothesis():
+    """score_all must return a real EU for all 12 hypotheses (the padded
+    score() tables only hold k_max=8 rows)."""
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_hyp(i, ["grep", "read"], q=0.5) for i in range(12)]
+    eu = sc.score_all(hyps, np.zeros(4), idle_window=8.0)
+    assert eu.shape == (12,)
+    assert np.all(eu > 0)
+
+
+def test_wide_beam_best_hypothesis_beyond_kmax_is_admitted():
+    """Regression: with 12 candidates and k_max=8, the clearly-best
+    hypothesis sitting at index 11 used to rank on garbage/padded zeros and
+    could never win a round.  Both paths must admit it."""
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_hyp(i, ["grep", "read"], q=0.1) for i in range(11)]
+    hyps.append(_mk_hyp(11, ["grep", "read", "parse"], q=0.95))
+    # tight limit: roughly two grep-class prefixes fit
+    slack = np.array([2.3, 11.0, 120.0, 1.0])
+    budget = slack.copy()
+    ref = admission.greedy_admit(hyps, sc, slack, budget, np.zeros(4))
+    fus = admission.fused_admit(hyps, sc, slack, budget, np.zeros(4))
+    assert 11 in {h.hid for h in ref.admitted}
+    assert 11 in {h.hid for h in fus.admitted}
+
+
+def test_wide_beam_fused_matches_reference():
+    """Beams wider than k_max are bucketed (padded), not dropped, and still
+    match the reference greedy."""
+    rng = np.random.default_rng(42)
+    sc = scoring.Scorer(Machine())
+    hyps = _random_beam(rng, 12)
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    ref = admission.greedy_admit(hyps, sc, slack, budget, np.zeros(4))
+    fus = admission.fused_admit(hyps, sc, slack, budget, np.zeros(4))
+    _assert_equivalent(ref, fus, hyps)
+
+
+def test_bucket_k():
+    assert admission.bucket_k(1, 8) == 8
+    assert admission.bucket_k(8, 8) == 8
+    assert admission.bucket_k(9, 8) == 16
+    assert admission.bucket_k(12, 8) == 16
+    assert admission.bucket_k(17, 8) == 24

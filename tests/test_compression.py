@@ -42,8 +42,9 @@ def test_compressed_sync_multidevice():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.training import compression as C
-        mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((4,), ("pod",))
         rng = np.random.default_rng(0)
         # per-pod distinct gradients, laid out on the pod axis
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -60,8 +61,8 @@ def test_compressed_sync_multidevice():
             s_all = jax.lax.all_gather(s, "pod")
             out = jnp.tensordot(s_all, q_all.astype(jnp.float32), axes=([0],[0])) / 4
             return out[None], ne[None]
-        fn = jax.shard_map(body, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                           out_specs=(P("pod"), P("pod")), check_vma=False)
+        fn = compat.shard_map(body, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                              out_specs=(P("pod"), P("pod")))
         err0 = jnp.zeros_like(g_all)
         synced, err = fn(g_all, err0)
         want = jnp.mean(g_all, axis=0)

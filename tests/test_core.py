@@ -1,8 +1,35 @@
 """B-PASTE core: mining, scoring, admission, sandbox, safety — unit +
-property tests (hypothesis) on the system's invariants."""
+property tests (hypothesis) on the system's invariants.
+
+The property-testing package ``hypothesis`` (requirements-dev.txt) shares a
+name with ``repro.core.hypothesis`` but not an import path; when it is not
+installed, the property tests below skip with a reason instead of failing
+the whole module at collection (the unit tests still run)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:                     # pragma: no cover
+    HYPOTHESIS_SKIP = "hypothesis not installed (pip install -r requirements-dev.txt)"
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        def deco(f):
+            def shim():                          # zero-arg: strategies never run
+                pytest.skip(HYPOTHESIS_SKIP)
+            shim.__name__ = f.__name__
+            shim.__doc__ = f.__doc__
+            return shim
+        return deco
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
 
 from repro.core import admission, interference, scoring
 from repro.core.events import (

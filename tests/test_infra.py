@@ -60,9 +60,9 @@ def test_elastic_restore_across_meshes(tmp_path):
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
         from repro.checkpoint import checkpoint as ck
-        mesh8 = jax.make_mesh((4, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh8 = compat.make_mesh((4, 2), ("data", "model"))
         spec = {{"w": P(None, "model")}}
         w = jax.device_put(np.arange(32, dtype=np.float32).reshape(4, 8),
                            NamedSharding(mesh8, spec["w"]))

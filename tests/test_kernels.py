@@ -7,6 +7,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.slow      # compile-heavy; fast loop: -m "not slow"
+
 RNG = np.random.default_rng(0)
 
 
@@ -110,6 +112,8 @@ def test_ssm_decode_matches_scan():
 
 def test_hypothesis_streaming_softmax_invariance():
     """Property: flash attention must be invariant to KV block size."""
+    pytest.importorskip("hypothesis",
+                        reason="hypothesis not installed (requirements-dev.txt)")
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=10, deadline=None)

@@ -9,6 +9,8 @@ from repro.models import model as M
 from repro.training import optimizer as O
 from repro.training import steps
 
+pytestmark = pytest.mark.slow      # compile-heavy; fast loop: -m "not slow"
+
 KEY = jax.random.PRNGKey(0)
 
 

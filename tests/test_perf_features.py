@@ -73,11 +73,11 @@ def test_sharded_decode_multidevice():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import dataclasses, jax, jax.numpy as jnp
+        from repro import compat
         from repro.configs import get_config
         from repro.models import model as M
         from repro.models.model import MeshContext
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         mi = MeshContext(mesh, ("data",), "model", 4, 2)
         cfg = get_config("musicgen-medium").reduced()
         params = M.init_params(jax.random.key(0), cfg)
@@ -112,11 +112,11 @@ def test_fsdp_specs_cover_all_params():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax
+        from repro import compat
         from repro.configs import get_config
         from repro.launch import shardings as sh
         from repro.launch.input_specs import param_structs
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
         cfg = get_config("granite-8b").reduced()
         specs = sh.fsdp_param_specs(cfg, mesh)
         structs = param_structs(cfg)
