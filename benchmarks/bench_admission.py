@@ -104,6 +104,8 @@ def run(smoke: bool = False) -> List[Dict]:
             "us_per_call": s["sched_us_per_admit"],
             "derived": (f"admit_calls={s['sched_admit_calls']} "
                         f"pack_hit={s['sched_pack_hit_rate']:.2f} "
+                        f"beam_occupancy={s['beam_occupancy']:.2f} "
+                        f"reuse_rate={s['reuse_rate']:.3f} "
                         f"makespan={s['makespan']:.2f} best_of={reps}"),
         })
     rows.append({

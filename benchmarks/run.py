@@ -19,15 +19,17 @@ def main() -> None:
                     help="run only sections whose name contains this substring")
     args = ap.parse_args()
 
-    from benchmarks import (bench_ablation, bench_admission, bench_eval_plan,
-                            bench_kernels, bench_scheduler, bench_serving,
-                            bench_table1, roofline)
+    from benchmarks import (bench_ablation, bench_admission, bench_beam,
+                            bench_eval_plan, bench_kernels, bench_scheduler,
+                            bench_serving, bench_table1, roofline)
 
     if args.smoke:
         sections = [
             ("scheduler (runtime overhead)", bench_scheduler.run),
             ("admission (fused vs reference)",
              lambda: bench_admission.run(smoke=True)),
+            ("beam (tree assembly occupancy/reuse)",
+             lambda: bench_beam.run(smoke=True)),
             ("eval_plan (paper SS9 metrics, smoke)",
              lambda: bench_eval_plan.run(smoke=True)),
         ]
@@ -38,6 +40,7 @@ def main() -> None:
             ("ablation (EU objective / beam width)", bench_ablation.run),
             ("scheduler (runtime overhead)", bench_scheduler.run),
             ("admission (fused vs reference)", bench_admission.run),
+            ("beam (tree assembly occupancy/reuse)", bench_beam.run),
             ("serving (B-PASTE x engine integration)", bench_serving.run),
             ("kernels", bench_kernels.run),
             ("roofline (dry-run derived)", roofline.run),

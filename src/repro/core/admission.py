@@ -39,7 +39,8 @@ from repro.core.events import RESOURCE_DIMS
 from repro.core.hypothesis import BranchHypothesis
 from repro.core.interference import Machine
 from repro.core.scoring import (
-    PackedBeam, Scorer, eu_given_admitted, pack_beam, static_gain_terms,
+    PackedBeam, Scorer, eu_given_admitted, pack_beam, prefix_rho,
+    static_gain_terms,
 )
 
 
@@ -55,11 +56,9 @@ def _fit_limit(limit):
     return limit + _FIT_EPS * (1.0 + limit)
 
 
-def _prefix_rho(h: BranchHypothesis) -> np.ndarray:
-    agg = np.zeros(RESOURCE_DIMS)
-    for n in h.safe_prefix():
-        agg = np.maximum(agg, n.rho.as_array())
-    return agg
+# concurrency-aware prefix demand shared with pack_beam, so the reference
+# greedy, the exact oracle, and the fused kernel agree on ρ exactly
+_prefix_rho = prefix_rho
 
 
 @dataclass

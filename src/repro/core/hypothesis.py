@@ -3,14 +3,24 @@
 A hypothesis packages a *bounded local future subgraph* G (Tool /
 Preparation / Model / Barrier-Commit nodes with edges), the follow
 probability q, late-bound argument resolvers Φ, an aggregate multi-resource
-profile ρ, and safety annotations σ.  Hypotheses are assembled online by
-chaining PASTE pattern tuples from the pattern engine: each root candidate
-(context → tool) is extended depth-first with its own most-likely
-continuations, up to (max_depth, max_nodes) bounds, inserting PREP nodes
+profile ρ, and safety annotations σ.  Hypotheses are assembled online from
+PASTE pattern tuples: each root candidate (context → tool) is grown
+best-first into a bounded **tree** — every node is extended with the top
+``branch_factor`` continuations from the pattern engine, with the parent's
+follow mass split across children via the empirical conditional
+probabilities — up to (max_depth, max_nodes) bounds, inserting PREP nodes
 before cold tools and BARRIER nodes before Level-2 (staged-write) nodes.
+The beam is filled with one tree per predicted root (multi-root fill, roots
+drawn with merged context backoff), so no single root can monopolize
+``beam_width``.
+
+``assembly="chain"`` keeps the pre-tree behavior (each root expanded with
+its single most likely continuation into a linear chain) as a measured
+baseline for benchmarks/bench_beam.py.
 """
 from __future__ import annotations
 
+import heapq
 import itertools
 from dataclasses import dataclass, field
 from enum import Enum
@@ -79,26 +89,63 @@ class BranchHypothesis:
     def solo_latency(self) -> float:
         return sum(n.est_latency for n in self.nodes)
 
-    def safe_prefix(self, allow_staged: bool = True) -> List[Node]:
-        """Longest speculatively-executable prefix (§6.3).
+    def parent_map(self) -> Dict[int, Tuple[int, ...]]:
+        """idx -> parent idx tuple.  Nodes are emitted in topological order
+        (parents precede children in ``nodes``); only the terminal MODEL
+        join has more than one parent."""
+        parents: Dict[int, List[int]] = {}
+        for i, j in self.edges:
+            parents.setdefault(j, []).append(i)
+        return {j: tuple(ps) for j, ps in parents.items()}
 
-        MODEL nodes are future reasoning boundaries — never executed by the
-        tool-speculation runtime (they bound the prefix).  BARRIER nodes
-        bound the prefix unless the policy allows staged Level-2 execution
-        (writes stay sandbox-local until authoritative confirmation either
-        way).  NON_SPECULATIVE always bounds."""
+    def path_to(self, idx: int,
+                parents: Optional[Dict[int, Tuple[int, ...]]] = None) -> List[int]:
+        """Root-to-node index path.  Every non-MODEL node has at most one
+        parent, so the path is unique (MODEL joins are never path targets).
+        Callers holding a cached ``parent_map()`` can pass it in."""
+        if parents is None:
+            parents = self.parent_map()
+        path = [idx]
+        while True:
+            ps = parents.get(path[0], ())
+            if not ps:
+                return path
+            path.insert(0, ps[0])
+
+    def safe_prefix(self, allow_staged: bool = True) -> List[Node]:
+        """Speculatively-executable frontier region of G (§6.3).
+
+        A node is in the prefix iff it is executable AND every ancestor on
+        its root path is prefix-transparent — a per-branch generalization of
+        the linear "longest prefix": one blocked branch no longer cuts off
+        its siblings.  MODEL nodes are future reasoning boundaries — never
+        executed by the tool-speculation runtime (they bound their branch).
+        BARRIER nodes bound a branch unless the policy allows staged Level-2
+        execution (writes stay sandbox-local until authoritative
+        confirmation either way); when passed they are transparent but not
+        emitted.  NON_SPECULATIVE and model-originated-args TOOL nodes bound
+        their branch."""
+        parents = self.parent_map()
+        open_: Dict[int, bool] = {}
         out = []
-        for n in self.nodes:
-            if n.kind == NodeKind.MODEL:
-                break
-            if n.kind == NodeKind.BARRIER and not allow_staged:
-                break
-            if n.level == SafetyLevel.NON_SPECULATIVE:
-                break
-            if n.kind == NodeKind.TOOL and n.missing_args:
-                break   # model-originated args: not executable ahead of time
-            if n.kind == NodeKind.BARRIER:
+        for n in self.nodes:                       # topological order
+            ps = parents.get(n.idx, ())
+            if ps and not all(open_.get(p, False) for p in ps):
+                open_[n.idx] = False
                 continue
+            if n.kind == NodeKind.MODEL:
+                open_[n.idx] = False
+                continue
+            if n.kind == NodeKind.BARRIER:
+                open_[n.idx] = allow_staged
+                continue
+            if n.level == SafetyLevel.NON_SPECULATIVE:
+                open_[n.idx] = False
+                continue
+            if n.kind == NodeKind.TOOL and n.missing_args:
+                open_[n.idx] = False   # model-originated args: not executable
+                continue
+            open_[n.idx] = True
             out.append(n)
         return out
 
@@ -107,6 +154,19 @@ class BranchHypothesis:
             if n.kind == NodeKind.TOOL:
                 return n
         return None
+
+
+COLD_TOOLS = frozenset({"test", "build", "pip_install"})
+
+
+@dataclass
+class _TreeNode:
+    """Expansion-time tree of pattern tuples (pre-assembly)."""
+    pt: PatternTuple
+    cond: float                   # P(this node | parent executed)
+    path_q: float                 # root_p · Π cond along the root path
+    depth: int
+    children: List["_TreeNode"] = field(default_factory=list)
 
 
 @dataclass
@@ -118,6 +178,7 @@ class HypothesisBuilder:
     branch_factor: int = 3
     min_q: float = 0.05
     with_prep: bool = True        # PREP nodes are a B-PASTE §4.1 feature
+    assembly: str = "tree"        # "tree" | "chain" (pre-tree linear baseline)
     _next_hid: itertools.count = field(default_factory=itertools.count)
 
     def _tool_node(self, idx: int, pt: PatternTuple, cond: float) -> Node:
@@ -130,7 +191,31 @@ class HypothesisBuilder:
 
     def build(self, history: Sequence[Event], now: float = 0.0,
               beam_width: int = 8) -> List[BranchHypothesis]:
-        """Enumerate up to beam_width branch hypotheses for the current state."""
+        """Enumerate up to beam_width branch hypotheses for the current state.
+
+        Tree assembly: one bounded tree-shaped subgraph per predicted root,
+        roots drawn with merged context-backoff (multi-root fill — beam
+        width is bounded by root supply, never by the first root saturating
+        it).  Chain assembly (baseline): linear chains, first root may
+        monopolize the beam."""
+        if self.assembly == "chain":
+            return self._build_chains(history, now, beam_width)
+        sigs = [signature(e) for e in history]
+        # multi-root fill: one bounded tree per predicted root (merged
+        # backoff supplies roots past the most specific table's fan-out),
+        # so the beam width is bounded by root supply, never by the first
+        # root saturating it
+        roots = self.engine.predict_sigs(sigs, top=beam_width, backoff="merge")
+        hyps: List[BranchHypothesis] = []
+        for root_pt, root_p in roots:
+            if root_p < self.min_q:
+                continue
+            tree = self._expand_tree(sigs, root_pt, root_p)
+            hyps.append(self._assemble_tree(tree, root_p, history, now))
+        return hyps
+
+    def _build_chains(self, history: Sequence[Event], now: float,
+                      beam_width: int) -> List[BranchHypothesis]:
         roots = self.engine.predict(history, top=self.branch_factor)
         sigs = [signature(e) for e in history]
         hyps: List[BranchHypothesis] = []
@@ -145,6 +230,107 @@ class HypothesisBuilder:
             if len(hyps) >= beam_width:
                 break
         return hyps
+
+    def _node_cost(self, pt: PatternTuple) -> int:
+        """Assembled-node footprint of one pattern tuple (tool node plus any
+        PREP / BARRIER helpers _assemble_tree will insert before it)."""
+        cost = 1
+        if self.with_prep and pt.tool in COLD_TOOLS:
+            cost += 1
+        if self.tools[pt.tool].level >= SafetyLevel.STAGED_WRITE:
+            cost += 1
+        return cost
+
+    def _expand_tree(
+        self, sigs: List, root: PatternTuple, root_p: float
+    ) -> _TreeNode:
+        """Best-first tree growth: repeatedly take the highest-path-probability
+        node and attach its top ``branch_factor`` continuations, splitting the
+        parent's follow mass across children via the empirical conditional
+        probabilities (predicted signatures appended in sig space).  Bounded
+        by ``max_depth`` (tools per path), ``max_nodes`` (assembled node
+        budget) and ``min_q`` (path-probability floor)."""
+        root_tn = _TreeNode(root, 1.0, root_p, 1)
+        budget = self.max_nodes - self._node_cost(root)
+        heap: List[Tuple[float, int, _TreeNode, List]] = []
+        ctr = itertools.count()
+
+        def push(tn: _TreeNode, pseudo_sigs: List):
+            if tn.depth < self.max_depth:
+                heapq.heappush(heap, (-tn.path_q, next(ctr), tn, pseudo_sigs))
+
+        push(root_tn, list(sigs) + [root.next_sig])
+        while heap and budget > 0:
+            _, _, tn, pseudo = heapq.heappop(heap)
+            for pt, p in self.engine.predict_sigs(pseudo, top=self.branch_factor):
+                q_child = tn.path_q * p
+                if q_child < self.min_q or pt.next_sig is None:
+                    continue
+                cost = self._node_cost(pt)
+                if cost > budget:
+                    continue
+                budget -= cost
+                child = _TreeNode(pt, p, q_child, tn.depth + 1)
+                tn.children.append(child)
+                push(child, pseudo + [pt.next_sig])
+        return root_tn
+
+    def _assemble_tree(
+        self, tree: _TreeNode, q: float, history: Sequence[Event], now: float
+    ) -> BranchHypothesis:
+        """Emit the bounded subgraph G: PREP before cold tools, BARRIER
+        before Level-2 nodes (both on the branch's own path), branching edges
+        at interior nodes, and a single MODEL join behind every leaf (the
+        reasoning boundary whichever branch the agent follows)."""
+        nodes: List[Node] = []
+        edges: List[Tuple[int, int]] = []
+        leaves: List[int] = []
+        idx = 0
+
+        def emit(tn: _TreeNode, parent: Optional[int]):
+            nonlocal idx
+            spec = self.tools[tn.pt.tool]
+            prev = parent
+            # preparation node before cold tools (speculative warm-up, §4.1)
+            if self.with_prep and tn.pt.tool in COLD_TOOLS:
+                prep_spec = self.tools["env_warmup"]
+                nodes.append(Node(idx, NodeKind.PREP, "env_warmup",
+                                  prep_spec.level, prep_spec.rho,
+                                  prep_spec.base_latency))
+                if prev is not None:
+                    edges.append((prev, idx))
+                prev = idx
+                idx += 1
+            # commit barrier before Level-2 nodes (§4.1, §6.3)
+            if spec.level >= SafetyLevel.STAGED_WRITE:
+                nodes.append(Node(idx, NodeKind.BARRIER, "barrier",
+                                  SafetyLevel.READ_ONLY, ResourceVector(), 0.0))
+                if prev is not None:
+                    edges.append((prev, idx))
+                prev = idx
+                idx += 1
+            nodes.append(self._tool_node(idx, tn.pt, tn.cond))
+            if prev is not None:
+                edges.append((prev, idx))
+            tool_idx = idx
+            idx += 1
+            if not tn.children:
+                leaves.append(tool_idx)
+            for child in tn.children:
+                emit(child, tool_idx)
+
+        emit(tree, None)
+        # model node: the reasoning boundary that this subgraph would unlock
+        model_spec = self.tools["model_step"]
+        nodes.append(Node(idx, NodeKind.MODEL, "model_step", model_spec.level,
+                          model_spec.rho, model_spec.base_latency))
+        for leaf in leaves:
+            edges.append((leaf, idx))
+        hist_key = tuple(signature(e) for e in history[-2:])
+        return BranchHypothesis(
+            hid=next(self._next_hid), nodes=nodes, edges=edges, q=q,
+            context_key=hist_key, created_t=now,
+        )
 
     def _expand_chain(
         self, sigs: List, root: PatternTuple, root_p: float
@@ -184,11 +370,10 @@ class HypothesisBuilder:
         edges: List[Tuple[int, int]] = []
         idx = 0
         prev: Optional[int] = None
-        cold_tools = {"test", "build", "pip_install"}
         for depth, pt in enumerate(chain):
             spec = self.tools[pt.tool]
             # preparation node before cold tools (speculative warm-up, §4.1)
-            if self.with_prep and pt.tool in cold_tools:
+            if self.with_prep and pt.tool in COLD_TOOLS:
                 prep_spec = self.tools["env_warmup"]
                 nodes.append(Node(idx, NodeKind.PREP, "env_warmup",
                                   prep_spec.level, prep_spec.rho,

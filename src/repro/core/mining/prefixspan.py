@@ -32,19 +32,28 @@ def prefixspan(
     """Mine frequent sequential patterns.
 
     Returns patterns sorted by (length desc, support desc).  ``max_gap``
-    bounds the number of skipped events between consecutive pattern items
-    (gap=1 means strictly contiguous).
+    bounds the number of skipped events between CONSECUTIVE pattern items
+    (gap=1 means strictly contiguous); the first item may occur anywhere.
+
+    Projections track EVERY in-window occurrence position per sequence
+    (standard gap-constrained pseudo-projection).  Keeping only the
+    earliest occurrence undercounts: in ``[a b a c]`` with ``max_gap=2``
+    the pattern ``(a, c)`` is supported by the second ``a`` (adjacent to
+    ``c``) even though the window after the first ``a`` contains no ``c``.
     """
-    # projected database: list of (seq_idx, next_start_pos)
-    def project(db: List[Tuple[int, int]], item: Hashable) -> List[Tuple[int, int]]:
+    # projected database: (seq_idx, next_start_pos) — possibly several
+    # positions per sequence, one per valid occurrence of the prefix
+    def project(db: List[Tuple[int, int]], item: Hashable,
+                anchored: bool) -> List[Tuple[int, int]]:
         out = []
+        seen = set()
         for si, pos in db:
             seq = sequences[si]
-            end = min(len(seq), pos + max_gap)
+            end = min(len(seq), pos + max_gap) if anchored else len(seq)
             for j in range(pos, end):
-                if seq[j] == item:
+                if seq[j] == item and (si, j + 1) not in seen:
+                    seen.add((si, j + 1))
                     out.append((si, j + 1))
-                    break
         return out
 
     results: List[Pattern] = []
@@ -52,11 +61,13 @@ def prefixspan(
     def grow(prefix: Tuple[Hashable, ...], db: List[Tuple[int, int]]):
         if len(prefix) >= max_len:
             return
-        # count candidate next items within gap windows
+        # count candidate next items: gap-windowed after a non-empty prefix,
+        # anywhere in the sequence for the pattern's first item
+        anchored = bool(prefix)
         counts: Dict[Hashable, set] = defaultdict(set)
         for si, pos in db:
             seq = sequences[si]
-            end = min(len(seq), pos + max_gap)
+            end = min(len(seq), pos + max_gap) if anchored else len(seq)
             for j in range(pos, end):
                 counts[seq[j]].add(si)
         for item, seqs in sorted(counts.items(), key=lambda kv: repr(kv[0])):
@@ -65,7 +76,7 @@ def prefixspan(
                 continue
             new_prefix = prefix + (item,)
             results.append(Pattern(new_prefix, sup))
-            grow(new_prefix, project(db, item))
+            grow(new_prefix, project(db, item, anchored))
 
     root_db = [(i, 0) for i in range(len(sequences))]
     grow((), root_db)

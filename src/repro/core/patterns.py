@@ -159,6 +159,10 @@ class PatternEngine:
     patterns: List[PatternTuple] = field(default_factory=list)
     next_tables: Dict[Tuple, Dict[Hashable, float]] = field(default_factory=dict)
     motifs: List = field(default_factory=list)
+    # context -> [(pattern, confidence) desc] — prediction is on the per-tick
+    # hot path (every tree-node expansion queries it), so no linear scans
+    _by_context: Dict[Tuple, List[Tuple[PatternTuple, float]]] = field(
+        default_factory=dict, repr=False)
 
     def fit(self, traces: Sequence[Trace]) -> "PatternEngine":
         seqs = [trace_signatures(t) for t in traces]
@@ -173,31 +177,51 @@ class PatternEngine:
                 self.patterns.append(
                     PatternTuple(ctx, tool, bindings, p, nxt_sig, missing))
         self.patterns.sort(key=lambda pt: -pt.confidence)
+        self._index()
         return self
 
+    def _index(self) -> Dict[Tuple, List[Tuple[PatternTuple, float]]]:
+        self._by_context = {}
+        for pt in self.patterns:          # already confidence-descending
+            self._by_context.setdefault(pt.context, []).append(
+                (pt, pt.confidence))
+        return self._by_context
+
     def predict(
-        self, history: Sequence[Event], top: int = 4
+        self, history: Sequence[Event], top: int = 4, backoff: str = "longest"
     ) -> List[Tuple[PatternTuple, float]]:
         """Top candidate next tools for the current history (longest matching
         context wins; confidence from the empirical table)."""
-        return self.predict_sigs([signature(e) for e in history], top)
+        return self.predict_sigs([signature(e) for e in history], top, backoff)
 
     def predict_sigs(
-        self, sigs: Sequence[Hashable], top: int = 4
+        self, sigs: Sequence[Hashable], top: int = 4, backoff: str = "longest"
     ) -> List[Tuple[PatternTuple, float]]:
-        """Signature-space prediction (used for chain expansion, where future
-        events exist only as predicted signatures)."""
+        """Signature-space prediction (used for subgraph expansion, where
+        future events exist only as predicted signatures).
+
+        backoff="longest": candidates from the longest matching context only
+        (the classic backoff — stop at the most specific table).
+        backoff="merge": candidates from every matching context length,
+        most-specific first, deduplicated by predicted signature — shorter
+        contexts contribute *additional* distinct roots, which is what lets
+        a beam fill past the fan-out of one table (multi-root fill)."""
+        by_ctx = self._by_context or (self._index() if self.patterns else {})
+        merged: List[Tuple[PatternTuple, float]] = []
+        seen_sigs = set()
         for cl in range(self.context_len, 0, -1):
             if len(sigs) < cl:
                 continue
             ctx = tuple(sigs[-cl:])
-            if ctx not in self.next_tables:
+            cands = [(pt, c) for pt, c in by_ctx.get(ctx, ())
+                     if pt.next_sig not in seen_sigs]
+            if backoff == "longest":
+                if cands:
+                    return cands[:top]
                 continue
-            cands = []
-            for pt in self.patterns:
-                if pt.context == ctx:
-                    cands.append((pt, pt.confidence))
-            if cands:
-                cands.sort(key=lambda c: -c[1])
-                return cands[:top]
-        return []
+            for pt, _ in cands:
+                seen_sigs.add(pt.next_sig)
+            merged.extend(cands)
+            if len(merged) >= top:
+                break
+        return merged[:top]

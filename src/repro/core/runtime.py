@@ -37,9 +37,12 @@ import time
 from repro.core.admission import bucket_k, fused_admit, greedy_admit
 from repro.core.events import (
     DEFAULT_TOOLS, RESOURCE_DIMS, Event, ResourceVector, SafetyLevel, ToolSpec,
+    signature,
 )
 from repro.core.executor import StateFacade, execute_tool
-from repro.core.hypothesis import BranchHypothesis, HypothesisBuilder, Node, NodeKind
+from repro.core.hypothesis import (
+    COLD_TOOLS, BranchHypothesis, HypothesisBuilder, Node, NodeKind,
+)
 from repro.core.interference import Machine
 from repro.core.patterns import PatternEngine
 from repro.core.safety import EligibilityPolicy, FULL_POLICY
@@ -68,9 +71,17 @@ class HypRun:
     sandbox: Sandbox
     node_runs: List[NodeRun]
     eu: float
-    cursor: int = 0               # next node index to launch
+    parents: Dict[int, Tuple[int, ...]] = field(default_factory=dict)
+    base_len: int = 0             # len(history) the hypothesis was built on:
+                                  # late bindings resolve against THIS prefix
+                                  # (mined offsets are relative to the build
+                                  # context, not whatever history grew into)
     status: str = "active"        # active|done|squashed
     used: bool = False            # any node reused/promoted (waste metric)
+
+    def path_to(self, i: int) -> List[int]:
+        """Root-to-node index path, via the cached parent map."""
+        return self.hyp.path_to(i, self.parents)
 
 
 @dataclass
@@ -99,7 +110,12 @@ class RuntimeConfig:
     mode: str = "bpaste"
     admission: str = "fused"      # "fused" (one-dispatch admit_beam kernel)
                                   # | "reference" (per-iteration greedy oracle)
-    beam_k: int = 6
+    assembly: str = "tree"        # "tree" (branching subgraphs, multi-root
+                                  # fill) | "chain" (pre-tree linear baseline)
+    beam_k: int = 12              # multi-root fill needs slots: makespan,
+                                  # reuse rate, and occupancy all improve up
+                                  # to ~12 slots on the default workload,
+                                  # then saturate (benchmarks/bench_beam.py)
     max_nodes: int = 12
     lam: float = 0.5
     mu: float = 1.0
@@ -124,6 +140,11 @@ class Metrics:
     spec_solo_seconds: float = 0.0
     qos_violations: int = 0
     auth_slowdown_samples: List[float] = field(default_factory=list)
+    auth_actions: int = 0
+    # occupied beam slots (active hypotheses, launchable or mid-flight) at
+    # each admission pass — beam fullness against the beam_k slot cap, NOT
+    # the per-pass candidate count (candidates drain as nodes launch)
+    beam_occupancy_samples: List[int] = field(default_factory=list)
     # scheduler self-overhead: wall time burned inside admission per tick
     sched_admit_calls: int = 0
     sched_admit_seconds: float = 0.0
@@ -144,6 +165,11 @@ class Metrics:
             "wasted_frac": self.wasted_solo_seconds / total_spec,
             "spec_solo_seconds": self.spec_solo_seconds,
             "qos_violations": self.qos_violations,
+            "reuse_rate": self.reuses / max(self.auth_actions, 1),
+            "beam_occupancy": (
+                float(np.mean(self.beam_occupancy_samples))
+                if self.beam_occupancy_samples else 0.0
+            ),
             "mean_auth_slowdown": float(np.mean(self.auth_slowdown_samples))
             if self.auth_slowdown_samples else 1.0,
             "sched_admit_calls": self.sched_admit_calls,
@@ -178,7 +204,14 @@ class BPasteRuntime:
         self.tools = tools
         self.rng = np.random.default_rng(rcfg.seed)
         self.engine = engine
-        self.builder = HypothesisBuilder(engine, tools=tools)
+        # tree assembly gets the full packed-table budget (rcfg.max_nodes
+        # minus the MODEL join): siblings must not eat the spine's depth.
+        # The chain baseline keeps the builder's historical default bound.
+        builder_nodes = (rcfg.max_nodes - 1 if rcfg.assembly == "tree"
+                         else HypothesisBuilder.max_nodes)
+        self.builder = HypothesisBuilder(engine, tools=tools,
+                                         assembly=rcfg.assembly,
+                                         max_nodes=builder_nodes)
         self.scorer = Scorer(machine, lam=rcfg.lam, mu=rcfg.mu,
                              k_max=rcfg.beam_k, n_max=rcfg.max_nodes)
         self.metrics = Metrics()
@@ -195,14 +228,11 @@ class BPasteRuntime:
         self.metrics.serial_reference = sum(
             es.ep.serial_latency(self.tools) for es in self.episodes
         )
-        # wasted speculative work: spec seconds in never-used hypotheses
+        # settle branches still alive at simulation end: _squash_one books
+        # their burn into spec/wasted exactly once (same path as mid-run
+        # squashes), so wasted_frac stays <= 1 by construction
         for es in self.episodes:
-            for hr in es.hyp_runs:
-                for nr in hr.node_runs:
-                    if nr.job is None:
-                        continue
-                    if nr.status in ("done", "running") and not hr.used:
-                        self.metrics.wasted_solo_seconds += nr.job.executed_solo_seconds
+            self._squash_all(es)
         return self.metrics
 
     def _launch_wave(self):
@@ -246,33 +276,11 @@ class BPasteRuntime:
         es.state.history.append(ev)
         es.pending_action = None
         es.inflight = None
+        self.metrics.auth_actions += 1
         keep = es.matched_hr
         es.matched_hr = None
-        from repro.core.events import signature as _sig
-        tail = tuple(_sig(e) for e in es.history[-2:])
-        tail1 = tail[-1:] if tail else ()
-        preds = {pt.tool for pt, _ in self.engine.predict(es.history,
-                                                          top=self.builder.branch_factor)}
         writes = getattr(es, "last_writes", set()) or set()
-        for hr in list(es.hyp_runs):
-            if hr.status != "active" or hr is keep:
-                continue
-            # state-safety: authoritative writes intersecting this branch's
-            # base read-set invalidate all its speculative results
-            if writes and (hr.sandbox.base_read_set & writes):
-                self._squash_one(es, hr)
-                continue
-            if hr.hyp.context_key in (tail, tail1):
-                continue                      # built for this context; still valid
-            # carry-over: keep branches whose next pending tool is still a
-            # top prediction for the new context (running work is preserved)
-            nxt = next((nr for nr in hr.node_runs
-                        if nr.node.kind == NodeKind.TOOL
-                        and nr.status in ("pending", "running")), None)
-            if nxt is not None and nxt.run_tool in preds:
-                continue
-            self._squash_one(es, hr)
-        es.hyp_runs = [hr for hr in es.hyp_runs if hr.status == "active"]
+        self._prune_beam(es, es.history, keep=keep, writes=writes)
         es.last_writes = set()
         es.step_idx += 1
         if es.step_idx >= len(es.ep.steps):
@@ -285,7 +293,9 @@ class BPasteRuntime:
             es.phase = "reasoning"
             self._start_model_step(es)
 
-    COLD_TOOLS = ("test", "build", "pip_install")
+    # shared with the builder so PREP insertion and the warm-up discount
+    # can never disagree on what counts as a cold tool
+    COLD_TOOLS = COLD_TOOLS
 
     def _start_auth_tool(self, es: EpisodeState, tool: str, args: Dict[str, Any]):
         spec = self.tools[tool]
@@ -312,10 +322,24 @@ class BPasteRuntime:
     # Phase 1: confirm / promote
     # ==================================================================
     def _pseudo_history(self, es: EpisodeState, hr: HypRun, upto: int) -> List[Event]:
-        """es.history extended with the branch's executed TOOL results before
-        node index `upto` — the view against which late bindings resolve."""
-        hist = list(es.history)
-        for p in hr.node_runs[:upto]:
+        """The build-time history prefix extended with the branch's executed
+        TOOL results along the root-to-node path before node index `upto` —
+        the view against which late bindings resolve.  Path-based, not
+        list-prefix: sibling subtrees are alternative futures and must not
+        leak into this node's event stream.  Truncating to ``base_len``
+        keeps mined source offsets aligned for carried-over branches (an
+        in-flight event at build time lands inside the prefix, so its real
+        result materializes; later events must not shift the tail)."""
+        hist = list(es.history[:hr.base_len])
+        if len(hist) < hr.base_len and es.inflight is not None:
+            # the hypothesis was built across an in-flight action that has
+            # not landed yet: restore the build-time placeholder so mined
+            # offsets stay aligned — bindings that target it resolve None
+            # (lazily, post-landing) instead of hitting the wrong event
+            t, a = es.inflight
+            hist.append(Event("tool", t, dict(a), None))
+        for j in hr.path_to(upto)[:-1]:
+            p = hr.node_runs[j]
             if p.node.kind == NodeKind.TOOL and p.status in ("done", "reused", "promoted")                     and p.result is not None:
                 hist.append(Event("tool", p.run_tool, dict(p.resolved_args), p.result))
         return hist
@@ -326,7 +350,14 @@ class BPasteRuntime:
         args = {b.arg_name: b.resolve(hist) for b in nr.node.bindings}
         return {k: v for k, v in args.items() if v is not None}
 
+    # Phase-1 match preference: a completed speculative result beats a
+    # running one beats an unstarted node.  With a wide beam several
+    # branches can contain the same tool; first-in-list order would let an
+    # early pending match shadow a finished result in a later branch.
+    _MATCH_RANK = {"done": 0, "running": 1, "pending": 2}
+
     def _match_action(self, es: EpisodeState, tool: str, args: Dict[str, Any]):
+        best = None
         for hr in es.hyp_runs:
             if hr.status != "active":
                 continue
@@ -335,9 +366,12 @@ class BPasteRuntime:
                     continue
                 if nr.transformed:
                     continue                      # transformed results aren't a full match
+                if nr.status not in self._MATCH_RANK:
+                    continue
                 prior_done = all(
-                    p.status in ("done", "reused")
-                    for p in hr.node_runs[:i] if p.node.kind == NodeKind.TOOL
+                    hr.node_runs[j].status in ("done", "reused")
+                    for j in hr.path_to(i)[:-1]
+                    if hr.node_runs[j].node.kind == NodeKind.TOOL
                 )
                 if nr.status == "pending":
                     if not prior_done:
@@ -347,8 +381,14 @@ class BPasteRuntime:
                         continue              # resolved args contradict
                 elif nr.resolved_args != args:
                     continue
-                return hr, i, nr
-        return None
+                rank = self._MATCH_RANK[nr.status]
+                if best is None or rank < best[0]:
+                    best = (rank, hr, i, nr)
+                if rank == 0:
+                    return hr, i, nr
+        if best is None:
+            return None
+        return best[1], best[2], best[3]
 
     def _phase1(self):
         for es in self.episodes:
@@ -359,7 +399,6 @@ class BPasteRuntime:
             if m is None:
                 self._note_misses(es, tool, args)
                 self._start_auth_tool(es, tool, args)
-                es.pending_action = ("", {})  # guard double-start
                 es.pending_action = None
                 es.phase = "executing"
                 continue
@@ -367,8 +406,8 @@ class BPasteRuntime:
             hr.used = True
             es.matched_hr = hr
             if nr.status == "done":
-                # reuse: commit state snapshot up to node i, zero extra latency
-                ok = self._commit_upto(es, hr, i)
+                # reuse: commit state along the matched path, zero extra latency
+                self._commit_path(es, hr, i)
                 self.metrics.reuses += 1
                 if i > 0:
                     self.metrics.prefix_reuses += 1
@@ -388,7 +427,7 @@ class BPasteRuntime:
                 def on_promoted(sim: Simulator, job: SimJob, es=es, hr=hr_ref, i=i_ref):
                     nr2 = hr.node_runs[i]
                     self._snapshot(hr, nr2)
-                    self._commit_upto(es, hr, i)
+                    self._commit_path(es, hr, i)
                     self._finish_action(es, nr2.result, job.work)
 
                 nr.job.meta["promoted_for"] = es.ep.eid
@@ -402,22 +441,94 @@ class BPasteRuntime:
 
                 nr.job.on_complete = chained
             else:
-                # valid prefix done, node not started: reuse prefix state and
-                # continue authoritatively from the boundary
-                self._commit_upto(es, hr, i - 1)
+                # valid path prefix done, node not started: reuse its state
+                # and continue authoritatively from the boundary
+                self._commit_path(es, hr, i, inclusive=False)
                 self.metrics.prefix_reuses += 1
                 es.phase = "executing"
                 es.pending_action = None
                 self._start_auth_tool(es, tool, args)
 
     def _note_misses(self, es: EpisodeState, tool: str, args):
-        for hr in es.hyp_runs:
-            if hr.status == "active" and not hr.used and any(
+        if self.builder.assembly == "chain":
+            # pre-tree baseline semantics: any miss wipes the whole beam
+            # (rebuilt from scratch in Phase 4)
+            for hr in es.hyp_runs:
+                if hr.status == "active" and not hr.used and any(
+                    nr.status in ("done", "running") for nr in hr.node_runs
+                ):
+                    self.metrics.mis_speculations += 1
+            self._squash_all(es)
+            return
+        # selective pruning: the context moved somewhere unpredicted, but a
+        # branch still speculating toward a top prediction for the post-miss
+        # context keeps its work (write-set invalidation happens in
+        # _finish_action once the authoritative action lands its writes)
+        hist = list(es.history) + [Event("tool", tool, dict(args))]
+        self._prune_beam(es, hist, missed=(tool, dict(args)),
+                         count_misses=True)
+
+    def _prune_beam(self, es: EpisodeState, hist: List[Event],
+                    keep: Optional[HypRun] = None, writes: set = frozenset(),
+                    missed: Optional[Tuple[str, Dict[str, Any]]] = None,
+                    count_misses: bool = False):
+        """Shared keep-or-squash policy after the context advances (either an
+        authoritative action finished, or a miss is about to start one).
+
+        A branch is squashed when (a) authoritative ``writes`` intersect its
+        base read-set (state safety), (b) it executed the ``missed`` tool
+        with different args — it speculated this very action wrongly, so its
+        invested work is proven garbage — or (c) it is neither built for the
+        current context nor still speculating toward a top prediction
+        (carry-over horizon matches what the builder would seed: merged
+        backoff up to beam_k under tree assembly)."""
+        tail = tuple(signature(e) for e in hist[-2:])
+        tail1 = tail[-1:] if tail else ()
+        if self.builder.assembly == "tree":
+            pred_pairs = self.engine.predict(hist, top=self.rcfg.beam_k,
+                                             backoff="merge")
+        else:
+            pred_pairs = self.engine.predict(hist,
+                                             top=self.builder.branch_factor)
+        preds = {pt.tool for pt, _ in pred_pairs}
+        for hr in list(es.hyp_runs):
+            if hr.status != "active" or hr is keep:
+                continue
+            conflicted = bool(writes) and bool(hr.sandbox.base_read_set & writes)
+            contradicted = missed is not None and any(
+                nr.node.kind == NodeKind.TOOL and nr.run_tool == missed[0]
+                and nr.status in ("done", "running")
+                and nr.resolved_args != missed[1]
+                for nr in hr.node_runs
+            )
+            if not (conflicted or contradicted):
+                if hr.hyp.context_key in (tail, tail1):
+                    continue                  # built for this context
+                if self._still_predicted(hr, preds):
+                    continue
+            if count_misses and not hr.used and any(
                 nr.status in ("done", "running") for nr in hr.node_runs
             ):
                 self.metrics.mis_speculations += 1
-        # context moved on: squash all (beam rebuilds in Phase 4)
-        self._squash_all(es)
+            self._squash_one(es, hr)
+        es.hyp_runs = [hr for hr in es.hyp_runs if hr.status == "active"]
+
+    def _still_predicted(self, hr: HypRun, preds: set) -> bool:
+        """Carry-over test: does this branch still speculate toward a
+        predicted tool?  Chains check their single next pending tool (the
+        pre-tree baseline rule); trees check every un-finished tool node —
+        but only branches with *executed* work (done/running/reused nodes)
+        are worth a beam slot: a pristine stale branch would crowd out the
+        fresh current-context tree that covers the same predictions."""
+        pend = [nr for nr in hr.node_runs if nr.node.kind == NodeKind.TOOL
+                and nr.status in ("pending", "running")]
+        if not pend:
+            return False
+        if self.builder.assembly == "chain":
+            return pend[0].run_tool in preds
+        invested = any(nr.status in ("done", "running", "reused", "promoted")
+                       for nr in hr.node_runs)
+        return invested and any(nr.run_tool in preds for nr in pend)
 
     def _snapshot(self, hr: HypRun, nr: NodeRun):
         nr.snapshot = {
@@ -426,16 +537,24 @@ class BPasteRuntime:
             "E": dict(hr.sandbox.E._overlay),
         }
 
-    def _commit_upto(self, es: EpisodeState, hr: HypRun, i: int) -> bool:
-        """Promotion commit via *replay*: re-derive the executed prefix's
-        results and staged effects against the LIVE state at zero latency.
+    def _commit_path(self, es: EpisodeState, hr: HypRun, i: int,
+                     inclusive: bool = True) -> None:
+        """Promotion commit via *replay*: re-derive the executed results and
+        staged effects along the matched root-to-node path against the LIVE
+        state at zero latency (``inclusive=False`` stops at node i's parent).
 
-        Tools are Level-1 replayable or Level-2 deterministic staged writes,
-        so replay is exact; it also revalidates results when the base state
-        advanced after the speculative run (sandbox.is_stale) — the paper's
-        "replayable prefix" reuse semantics without stale-snapshot risk."""
+        Path-based, not list-prefix: committing a branch must not replay
+        sibling subtrees — those are alternative futures the agent did NOT
+        take.  Tools are Level-1 replayable or Level-2 deterministic staged
+        writes, so replay is exact; it also revalidates results when the
+        base state advanced after the speculative run (sandbox.is_stale) —
+        the paper's "replayable prefix" reuse semantics without
+        stale-snapshot risk."""
         fac = StateFacade(es.state)
-        for j in range(i + 1):
+        path = hr.path_to(i)
+        if not inclusive:
+            path = path[:-1]
+        for j in path:
             nr = hr.node_runs[j]
             if nr.node.kind != NodeKind.TOOL or nr.status not in ("done", "promoted", "reused"):
                 continue
@@ -443,26 +562,47 @@ class BPasteRuntime:
                 nr.result = execute_tool(nr.run_tool, nr.resolved_args, fac)
             except KeyError:
                 pass
-            nr.status = "reused" if nr.status == "done" else nr.status
+            # a committed node is consumed by the authoritative path either
+            # way; leaving promotions as "promoted" would strand their
+            # descendants (the ready/prior-done tests require done|reused)
+            if nr.status in ("done", "promoted"):
+                nr.status = "reused"
         es.last_writes = set(getattr(es, "last_writes", set())) | set(fac.writes)
         es.state.bump()
         hr.sandbox.base_version = es.state.version
-        return True
 
     def _squash_one(self, es: EpisodeState, hr: HypRun):
+        """Squash a branch and settle its speculative-work accounting.
+
+        Waste is NODE-granular: a node whose result was consumed by the
+        authoritative path carries status reused/promoted; a node still
+        "done" (or running) at squash time was executed and never consumed —
+        that is wasted work even when a sibling subtree of the same branch
+        was followed (tree hypotheses hedge, so branch-level `used` would
+        hide the un-taken subtrees' cost).
+
+        Invariant: every wasted_solo_seconds increment has a matching (>=)
+        spec_solo_seconds contribution, so wasted_frac <= 1 by construction:
+          * done nodes booked job.work into spec_solo at completion; waste
+            books the same job.work here;
+          * running nodes book their partial burn into BOTH here — their
+            completion callback will never fire (accounting happens before
+            any status mutation; the old code flipped running->pending first
+            and left mid-flight burn out of spec_solo entirely)."""
         hr.status = "squashed"
         hr.sandbox.squash()
         for nr in hr.node_runs:
-            if nr.job is not None:
-                if nr.status == "running":
-                    self.sim.preempt(nr.job.jid)
-                    nr.status = "pending"
-                burned = nr.job.executed_solo_seconds
-                self.metrics.spec_solo_seconds += max(
-                    0.0, burned - nr.job.work if nr.status == "done" else burned
-                ) if nr.status != "done" else 0.0
-                if not hr.used:
-                    self.metrics.wasted_solo_seconds += burned
+            job = nr.job
+            if job is None:
+                continue
+            if nr.status == "running":
+                self.sim.preempt(job.jid)
+                self.metrics.spec_solo_seconds += job.executed_solo_seconds
+                self.metrics.wasted_solo_seconds += job.executed_solo_seconds
+                nr.status = "pending"
+            elif nr.status == "done":
+                self.metrics.wasted_solo_seconds += job.work
+            nr.job = None
 
     def _squash_all(self, es: EpisodeState):
         for hr in es.hyp_runs:
@@ -501,6 +641,12 @@ class BPasteRuntime:
                 break
             spec_jobs.remove(victim)
             self.sim.preempt(victim.jid)
+            # the preempted job's partial burn is discarded (a relaunch
+            # starts a fresh job), so settle it now: no completion callback
+            # will ever claim it, and discarded progress is wasted work even
+            # if the branch is eventually followed
+            self.metrics.spec_solo_seconds += victim.executed_solo_seconds
+            self.metrics.wasted_solo_seconds += victim.executed_solo_seconds
             nr = victim.meta.get("node_run")
             if nr is not None:
                 nr.status = "pending"
@@ -544,7 +690,15 @@ class BPasteRuntime:
 
     def _refresh_beam(self, es: EpisodeState):
         active = [hr for hr in es.hyp_runs if hr.status == "active"]
-        have = {self._remaining_key(hr.node_runs) for hr in active}
+        if len(active) >= self.rcfg.beam_k:
+            return      # beam full — don't pay the builder for discards
+        # dedup is scoped by build context: a carried-over branch resolves
+        # its late bindings against ITS build-time history, so it is NOT a
+        # duplicate of a fresh same-tool-sequence hypothesis built for the
+        # current context (blocking the fresh one would leave only a branch
+        # whose args contradict the agent's actual next action)
+        have = {(self._remaining_key(hr.node_runs), hr.hyp.context_key)
+                for hr in active}
         if self.rcfg.mode == "paste":
             builder = dataclasses.replace(self.builder, max_depth=1, with_prep=False)
         else:
@@ -558,7 +712,7 @@ class BPasteRuntime:
         fresh = builder.build(hist, now=self.sim.now,
                               beam_width=self.rcfg.beam_k)
         for h in fresh:
-            key = self._remaining_key(h.nodes)
+            key = (self._remaining_key(h.nodes), h.context_key)
             if key in have or len(active) >= self.rcfg.beam_k:
                 continue
             nrs = []
@@ -572,12 +726,17 @@ class BPasteRuntime:
                     ok = False
                     break
                 run_tool, transformed = form
-                args = {b.arg_name: b.resolve(es.history) for b in n.bindings}
+                # resolve against the BUILD context (with the in-flight
+                # placeholder): mined offsets are relative to `hist`, and a
+                # binding that targets the unlanded event must yield None
+                # now rather than a wrong value from the prior event
+                args = {b.arg_name: b.resolve(hist) for b in n.bindings}
                 args = {k: v for k, v in args.items() if v is not None}
                 nrs.append(NodeRun(n, args, run_tool=run_tool, transformed=transformed))
             if not ok:
                 continue
-            hr = HypRun(h, es.ep.eid, Sandbox(es.state, h.hid), nrs, eu=0.0)
+            hr = HypRun(h, es.ep.eid, Sandbox(es.state, h.hid), nrs, eu=0.0,
+                        parents=h.parent_map(), base_len=len(hist))
             es.hyp_runs.append(hr)
             active.append(hr)
             have.add(key)
@@ -600,13 +759,30 @@ class BPasteRuntime:
         return es.packed_beam
 
     def _admit(self, es: EpisodeState):
-        cand = [hr for hr in es.hyp_runs
-                if hr.status == "active" and self._next_launchable(hr) is not None
+        # admission (re-)scores IDLE branches only: a branch with running
+        # nodes was already admitted — its demand conditions this pass via
+        # spec_rho below, its meta_admitted persists, and _launch_nodes
+        # keeps launching its ready siblings without re-admission (scoring
+        # it again would double-charge its in-flight demand against the
+        # packed prefix rho)
+        active = [hr for hr in es.hyp_runs if hr.status == "active"]
+        cand = [hr for hr in active
+                if self._launch_frontier(hr)
                 and not any(nr.status == "running" for nr in hr.node_runs)]
         if not cand:
             return
+        # beam fullness when an admission pass actually runs: every active
+        # hypothesis occupies one of the beam_k slots, whether launchable
+        # this tick or mid-flight (see Metrics.beam_occupancy_samples)
+        self.metrics.beam_occupancy_samples.append(len(active))
+        # ALL in-flight speculative demand is part of the conditioning
+        # state: it stretches candidates (ΔI), consumes the budget B, and
+        # shrinks the slack exactly like admitted-set demand (candidates
+        # are idle, so nothing is charged twice)
+        spec_rho = self.sim.running_demand(speculative=True)
+        auth_rho = self.sim.running_demand(speculative=False) + spec_rho
         slack = self.sim.slack()
-        auth_rho = self.sim.running_demand(speculative=False)
+        budget = np.maximum(self.rcfg.budget.as_array() - spec_rho, 0.0)
         if self.rcfg.mode == "parallel":
             for hr in cand:
                 hr.eu = hr.hyp.q
@@ -618,12 +794,12 @@ class BPasteRuntime:
         t0 = time.perf_counter()
         if self.rcfg.admission == "reference":
             res = greedy_admit(
-                hyps, self.scorer, slack, self.rcfg.budget.as_array(), auth_rho,
+                hyps, self.scorer, slack, budget, auth_rho,
                 idle_window=self.rcfg.idle_window,
             )
         else:
             res = fused_admit(
-                hyps, self.scorer, slack, self.rcfg.budget.as_array(), auth_rho,
+                hyps, self.scorer, slack, budget, auth_rho,
                 idle_window=self.rcfg.idle_window,
                 packed=self._packed_for(es, cand),
             )
@@ -637,58 +813,72 @@ class BPasteRuntime:
             else:
                 hr.meta_admitted = False
 
-    def _next_launchable(self, hr: HypRun) -> Optional[int]:
-        """Index of the next executable (TOOL/PREP) node of the branch prefix,
-        or None.  BARRIERs pass when staged execution is allowed; MODEL nodes
-        always bound the prefix (reasoning is not tool-speculable here)."""
+    def _launch_frontier(self, hr: HypRun) -> List[int]:
+        """Indices of every launchable (TOOL/PREP) node on the branch's
+        ready frontier: pending nodes whose executable ancestors along the
+        root path are all done/reused.  A running or blocked node gates only
+        its OWN subtree — sibling branches keep their frontier (the serial
+        node_runs-order walk this replaces assumed a linear chain).
+
+        Per path: BARRIERs pass when staged execution is allowed; MODEL
+        nodes always bound (reasoning is not tool-speculable here);
+        NON_SPECULATIVE bounds; beyond a model-originated-args TOOL node
+        only Level-0 PREP nodes may run (§7 Level 0: warm-up needs no
+        arguments)."""
         allow_staged = self.policy.max_level >= SafetyLevel.STAGED_WRITE
-        past_boundary = False   # beyond a model-originated-args TOOL node,
-                                # only Level-0 PREP nodes may run (§7 Level 0:
-                                # warm-up needs no arguments)
+        out: List[int] = []
+        open_: Dict[int, bool] = {}      # subtree not bounded above
+        ready: Dict[int, bool] = {}      # executable ancestors all finished
+        preponly: Dict[int, bool] = {}   # past a missing-args boundary
         for i, nr in enumerate(hr.node_runs):
             kind = nr.node.kind
-            if kind == NodeKind.MODEL:
-                return None
+            ps = hr.parents.get(i, ())
+            if ps:
+                op = all(open_.get(p, False) for p in ps)
+                rd = all(ready.get(p, False) for p in ps)
+                po = any(preponly.get(p, False) for p in ps)
+            else:
+                op, rd, po = True, True, False
+            open_[i], ready[i], preponly[i] = False, False, po
+            if not op:
+                continue
+            if kind == NodeKind.MODEL or nr.node.level == SafetyLevel.NON_SPECULATIVE:
+                continue
             if kind == NodeKind.BARRIER:
-                if not allow_staged:
-                    return None
+                open_[i], ready[i] = allow_staged, rd
                 continue
-            if nr.node.level == SafetyLevel.NON_SPECULATIVE:
-                return None
             if kind == NodeKind.TOOL and nr.node.missing_args:
-                past_boundary = True
-                continue
-            if past_boundary and kind != NodeKind.PREP:
+                open_[i], ready[i], preponly[i] = True, rd, True
                 continue
             if kind == NodeKind.PREP and nr.status == "pending"                     and nr.run_tool == "env_warmup" and self.sim.now <= self.warm_until:
                 nr.status = "reused"          # already warm — prep is a no-op
-                continue
-            if nr.status == "pending":
-                prior = [p for p in hr.node_runs[:i]
-                         if p.node.kind in (NodeKind.TOOL, NodeKind.PREP)
-                         and not p.node.missing_args]
-                if all(p.status in ("done", "reused") for p in prior):
-                    return i
-                return None
-            if nr.status == "running":
-                return None
-        return None
+            if nr.status == "pending" and rd and (kind == NodeKind.PREP or not po):
+                out.append(i)
+            open_[i] = True
+            ready[i] = rd and nr.status in ("done", "reused")
+        return out
 
     def _launch_nodes(self):
+        """Start admitted frontier nodes in descending admission-EU order
+        (Algorithm 1: highest-value branches claim the slack first — with a
+        wide beam, list order would let low-value branches starve the
+        valuable ones at the capacity boundary)."""
         cap = self.machine.cap_array()
+        ready: List[Tuple[float, int, int, EpisodeState, HypRun]] = []
         for es in self.episodes:
             for hr in es.hyp_runs:
                 if hr.status != "active" or not getattr(hr, "meta_admitted", False):
                     continue
-                i = self._next_launchable(hr)
-                if i is None:
-                    continue
-                nr = hr.node_runs[i]
-                demand = nr.node.rho.as_array()
-                total = self.sim.running_demand() + demand
-                if np.any((total > cap + 1e-9) & (demand > 1e-12)):
-                    continue                      # no slack on a dim we need
-                self._start_spec_node(es, hr, i)
+                for i in self._launch_frontier(hr):
+                    ready.append((-hr.eu, hr.hyp.hid, i, es, hr))
+        ready.sort(key=lambda t: t[:3])
+        for _, _, i, es, hr in ready:
+            nr = hr.node_runs[i]
+            demand = nr.node.rho.as_array()
+            total = self.sim.running_demand() + demand
+            if np.any((total > cap + 1e-9) & (demand > 1e-12)):
+                continue                          # no slack on a dim we need
+            self._start_spec_node(es, hr, i)
 
     def _start_spec_node(self, es: EpisodeState, hr: HypRun, i: int) -> bool:
         nr = hr.node_runs[i]

@@ -37,7 +37,13 @@ from repro.core.interference import Machine
 
 @dataclass
 class PackedBeam:
-    """Padded arrays for a beam of K hypotheses, Nmax nodes each."""
+    """Padded arrays for a beam of K hypotheses, Nmax nodes each.
+
+    ``prefix_mask`` marks the speculatively-executable FRONTIER region of
+    each subgraph (``BranchHypothesis.safe_prefix``): for tree-shaped
+    hypotheses a blocked branch bounds only its own subtree, so the mask is
+    a set of root-connected nodes, not a contiguous list prefix.  The DAG
+    adjacency drives ΔU's critical path either way."""
     node_lat: np.ndarray      # (K, N)
     node_prob: np.ndarray     # (K, N) conditional probs
     node_mask: np.ndarray     # (K, N)
@@ -46,6 +52,47 @@ class PackedBeam:
     q: np.ndarray             # (K,)
     rho: np.ndarray           # (K, R) prefix aggregate demand
     k_valid: np.ndarray       # (K,) hypothesis mask
+
+
+def prefix_rho(h: BranchHypothesis) -> np.ndarray:
+    """Worst-case concurrent demand of the safe-prefix frontier region.
+
+    Nodes on one root path run serially (ancestor gating), but sibling
+    branches of a tree-shaped prefix may run CONCURRENTLY, so the
+    element-wise max over prefix nodes (exact for linear chains) would
+    understate a branchy prefix.  Per-dimension DP over the prefix
+    sub-forest: conc(v) = max(rho_v, Σ_children conc(child)); disconnected
+    prefix roots co-run, so their conc sums.  Reduces to the element-wise
+    max for chains."""
+    prefix = {n.idx: n for n in h.safe_prefix()}
+    if not prefix:
+        return np.zeros(RESOURCE_DIMS)
+    # effective parent = nearest ANCESTOR in the prefix: BARRIER nodes are
+    # prefix-transparent (passed but not emitted), so serial parent->barrier
+    # ->child paths must stay connected here or the child would be summed
+    # as a bogus concurrent root
+    parents = h.parent_map()
+    children: dict = {}
+    roots = []
+    for idx in prefix:
+        ps = parents.get(idx, ())
+        anc = ps[0] if ps else None
+        while anc is not None and anc not in prefix:
+            ps = parents.get(anc, ())
+            anc = ps[0] if ps else None
+        if anc is None:
+            roots.append(idx)
+        else:
+            children.setdefault(anc, []).append(idx)
+
+    def conc(i: int) -> np.ndarray:
+        own = prefix[i].rho.as_array()
+        kids = children.get(i)
+        if not kids:
+            return own
+        return np.maximum(own, np.sum([conc(j) for j in kids], axis=0))
+
+    return np.sum([conc(i) for i in roots], axis=0)
 
 
 def pack_beam(hyps: Sequence[BranchHypothesis], k_max: int, n_max: int) -> PackedBeam:
@@ -62,15 +109,13 @@ def pack_beam(hyps: Sequence[BranchHypothesis], k_max: int, n_max: int) -> Packe
         k_valid[k] = 1.0
         q[k] = h.q
         prefix_ids = {n.idx for n in h.safe_prefix()}
-        agg = np.zeros(RESOURCE_DIMS)
         for n in h.nodes[:N]:
             node_lat[k, n.idx] = n.est_latency
             node_prob[k, n.idx] = n.cond_prob
             node_mask[k, n.idx] = 1.0
             if n.idx in prefix_ids:
                 prefix_mask[k, n.idx] = 1.0
-                agg = np.maximum(agg, n.rho.as_array())
-        rho[k] = agg
+        rho[k] = prefix_rho(h)
         for i, j in h.edges:
             if i < N and j < N:
                 adj[k, i, j] = 1.0

@@ -8,6 +8,14 @@ late-bound arguments — is computable ahead of time).  Every scheduler
 end-to-end comparisons are exact.  The runtime only ever sees the next
 action after the preceding model step completes — the execution graph is
 revealed online, per the paper's core premise.
+
+Each motif carries seeded *variant* steps (examine-before-edit, fetch
+instead of visit, deep-dive read, retry-after-failed-test) with
+probabilities scaled by ``WorkloadConfig.variation``: agent control flow
+shares prefixes but diverges, so the mined conditional tables have fan-out
+>1 — the regime where tree-shaped hypotheses and multi-root beam fill pay
+off (and real ReAct traces live, per PASTE's characterization).  Set
+``variation=0`` for the fully deterministic legacy streams.
 """
 from __future__ import annotations
 
@@ -42,7 +50,7 @@ def _model_work(rng) -> float:
     return float(np.clip(rng.normal(2.5, 0.5), 1.0, 5.0))
 
 
-def _script_fix_bug(eid: int, rng) -> List[Step]:
+def _script_fix_bug(eid: int, rng, var: float = 1.0) -> List[Step]:
     """locate-examine + edit-verify motif."""
     st = AgentState()
     fac = StateFacade(st)
@@ -55,16 +63,20 @@ def _script_fix_bug(eid: int, rng) -> List[Step]:
     r = act("grep", pattern=f"bug_{eid}")
     path = r["path"]
     act("read", path=path)
+    if var > 0 and rng.random() < 0.35 * var:
+        act("parse", path=path)            # examine variant before editing
     n_attempts = int(rng.integers(1, 4))
     for j in range(n_attempts - 1):
         act("edit", path=path, change=f"attempt{j}")
         act("test", target=path)
+        if var > 0 and rng.random() < 0.25 * var:
+            act("read", path=path)         # re-examine after a failed attempt
     act("edit", path=path, change="fix")
     act("test", target=path)
     return steps
 
 
-def _script_research(eid: int, rng) -> List[Step]:
+def _script_research(eid: int, rng, var: float = 1.0) -> List[Step]:
     """search-visit motif."""
     st = AgentState()
     fac = StateFacade(st)
@@ -77,12 +89,17 @@ def _script_research(eid: int, rng) -> List[Step]:
     n_rounds = int(rng.integers(1, 4))
     for k in range(n_rounds):
         r = act("search", query=f"topic_{eid}_{k}")
-        r2 = act("visit", url=r["top"])
+        if var > 0 and rng.random() < 0.3 * var:
+            r2 = act("fetch", url=r["top"])    # bulk-fetch variant
+        else:
+            r2 = act("visit", url=r["top"])
         act("parse", path=r2["path"])
+        if var > 0 and rng.random() < 0.25 * var:
+            act("read", path=r2["path"])       # deep-dive variant
     return steps
 
 
-def _script_setup(eid: int, rng) -> List[Step]:
+def _script_setup(eid: int, rng, var: float = 1.0) -> List[Step]:
     """environment setup motif (Level-2 heavy: exercises transformed
     speculation + staged writes)."""
     st = AgentState()
@@ -94,8 +111,37 @@ def _script_setup(eid: int, rng) -> List[Step]:
         return execute_tool(tool, args, fac)
 
     act("pip_install", pkg=f"dep_{eid}")
+    if var > 0 and rng.random() < 0.3 * var:
+        act("pip_install", pkg=f"extra_{eid}")   # second dependency variant
     act("build")
     r = act("grep", pattern=f"entry_{eid}")
+    act("test", target=r["path"])
+    if var > 0 and rng.random() < 0.25 * var:
+        act("edit", path=r["path"], change="fix")   # post-setup patch variant
+        act("test", target=r["path"])
+    return steps
+
+
+def _script_audit(eid: int, rng, var: float = 1.0) -> List[Step]:
+    """cross-cutting review motif: locate-examine interleaved with research
+    before an edit-verify tail.  Passes THROUGH the other motifs' contexts
+    with different continuations (e.g. grep,read -> search instead of edit;
+    visit,parse -> edit instead of search), so shared-prefix fan-out shows
+    up in the mined tables."""
+    st = AgentState()
+    fac = StateFacade(st)
+    steps: List[Step] = []
+
+    def act(tool, **args):
+        steps.append(Step(_model_work(rng), tool, dict(args)))
+        return execute_tool(tool, args, fac)
+
+    r = act("grep", pattern=f"audit_{eid}")
+    act("read", path=r["path"])
+    s = act("search", query=f"ref_{eid}")
+    v = act("visit", url=s["top"])
+    act("parse", path=v["path"])
+    act("edit", path=r["path"], change="fix")
     act("test", target=r["path"])
     return steps
 
@@ -104,6 +150,7 @@ KINDS = {
     "fix_bug": _script_fix_bug,
     "research": _script_research,
     "setup": _script_setup,
+    "audit": _script_audit,
 }
 
 
@@ -114,6 +161,8 @@ class WorkloadConfig:
     mix: Tuple[Tuple[str, float], ...] = (
         ("fix_bug", 0.5), ("research", 0.3), ("setup", 0.2),
     )
+    variation: float = 1.0        # scales motif-variant probabilities;
+                                  # 0 = deterministic legacy streams
 
 
 def make_episodes(cfg: WorkloadConfig) -> List[Episode]:
@@ -122,7 +171,12 @@ def make_episodes(cfg: WorkloadConfig) -> List[Episode]:
     episodes = []
     for eid in range(cfg.n_episodes):
         kind = str(rng.choice(kinds, p=np.array(probs) / sum(probs)))
-        steps = KINDS[kind](eid, rng)
+        # the cross-cutting audit motif rides on variation so that
+        # variation=0 reproduces the legacy streams draw-for-draw
+        if cfg.variation > 0 and "audit" not in dict(cfg.mix) \
+                and rng.random() < 0.25 * cfg.variation:
+            kind = "audit"
+        steps = KINDS[kind](eid, rng, cfg.variation)
         episodes.append(Episode(eid, kind, steps))
     return episodes
 

@@ -198,3 +198,119 @@ def test_bucket_k():
     assert admission.bucket_k(9, 8) == 16
     assert admission.bucket_k(12, 8) == 16
     assert admission.bucket_k(17, 8) == 24
+
+
+# ======================================================================
+# Tree-shaped beams (branching subgraphs; prefix = per-branch frontier)
+# ======================================================================
+
+def _mk_tree_hyp(hid, rng, q=None):
+    """Random bounded tree: each tool node gets 0-2 children, probability
+    mass split across siblings, terminal MODEL join behind the leaves."""
+    from repro.core.events import ResourceVector
+    q = float(rng.uniform(0.2, 0.95)) if q is None else q
+    nodes, edges = [], []
+    idx = 0
+
+    def emit(parent, cond, depth):
+        nonlocal idx
+        t = READ_TOOLS[int(rng.integers(0, len(READ_TOOLS)))]
+        spec = DEFAULT_TOOLS[t]
+        me = idx
+        nodes.append(Node(me, NodeKind.TOOL, t, spec.level, spec.rho,
+                          spec.base_latency, cond_prob=cond))
+        if parent is not None:
+            edges.append((parent, me))
+        idx += 1
+        leaves = []
+        if depth < 3 and idx < 7:
+            n_kids = int(rng.integers(0, 3))
+            if n_kids:
+                probs = rng.dirichlet(np.ones(n_kids)) * float(rng.uniform(0.6, 1.0))
+                for p in probs:
+                    leaves += emit(me, float(p), depth + 1)
+        return leaves or [me]
+
+    leaves = emit(None, 1.0, 1)
+    m = DEFAULT_TOOLS["model_step"]
+    nodes.append(Node(idx, NodeKind.MODEL, "model_step", m.level, m.rho,
+                      m.base_latency))
+    for leaf in leaves:
+        edges.append((leaf, idx))
+    return BranchHypothesis(hid, nodes, edges, q, context_key=("x",))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+@pytest.mark.parametrize("k", [3, 6, 10])
+def test_tree_beam_fused_matches_reference(seed, k):
+    """Fused vs reference on tree-shaped beams: identical admitted sets and
+    EU-at-admit — the frontier prefix mask and the DAG critical path must
+    agree across every admission path."""
+    rng = np.random.default_rng(300 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_tree_hyp(h, rng) for h in range(k)]
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    ref = admission.greedy_admit(hyps, sc, slack, budget, auth)
+    fus = admission.fused_admit(hyps, sc, slack, budget, auth)
+    _assert_equivalent(ref, fus, hyps)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_tree_beam_numpy_path_matches_kernel(seed):
+    rng = np.random.default_rng(400 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_tree_hyp(h, rng) for h in range(5)]
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    via_np = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                   small_beam_threshold=len(hyps))
+    via_krn = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                    small_beam_threshold=0)
+    _assert_equivalent(via_np, via_krn, hyps)
+
+
+def test_prefix_rho_serial_through_barrier_is_max_not_sum():
+    """BARRIER nodes are prefix-transparent: a serial read->BARRIER->edit
+    path is one chain, so its demand is the element-wise max — summing the
+    post-barrier subtree as a disconnected root overstated every
+    staged-write branch's rho."""
+    from repro.core.events import ResourceVector, SafetyLevel
+    r, e = DEFAULT_TOOLS["read"], DEFAULT_TOOLS["edit"]
+    nodes = [Node(0, NodeKind.TOOL, "read", r.level, r.rho, 0.8),
+             Node(1, NodeKind.BARRIER, "barrier", SafetyLevel.READ_ONLY,
+                  ResourceVector(), 0.0),
+             Node(2, NodeKind.TOOL, "edit", e.level, e.rho, 1.2)]
+    h = BranchHypothesis(0, nodes, [(0, 1), (1, 2)], 0.9, ("x",))
+    got = scoring.prefix_rho(h)
+    np.testing.assert_allclose(
+        got, np.maximum(r.rho.as_array(), e.rho.as_array()))
+
+
+def test_prefix_rho_sums_concurrent_siblings():
+    """Sibling branches of a tree prefix can run concurrently: their conc
+    demand sums under the branch point (chains still reduce to the max)."""
+    g = DEFAULT_TOOLS["grep"]
+    nodes = [Node(0, NodeKind.TOOL, "grep", g.level, g.rho, 1.5),
+             Node(1, NodeKind.TOOL, "read", DEFAULT_TOOLS["read"].level,
+                  DEFAULT_TOOLS["read"].rho, 0.8),
+             Node(2, NodeKind.TOOL, "parse", DEFAULT_TOOLS["parse"].level,
+                  DEFAULT_TOOLS["parse"].rho, 2.0)]
+    h = BranchHypothesis(0, nodes, [(0, 1), (0, 2)], 0.9, ("x",))
+    got = scoring.prefix_rho(h)
+    sibs = DEFAULT_TOOLS["read"].rho.as_array() + DEFAULT_TOOLS["parse"].rho.as_array()
+    np.testing.assert_allclose(got, np.maximum(g.rho.as_array(), sibs))
+
+
+def test_tree_prefix_mask_matches_safe_prefix():
+    """pack_beam's prefix mask must be exactly the frontier safe_prefix of
+    each tree (branch-blocked subtrees excluded, siblings kept)."""
+    rng = np.random.default_rng(7)
+    hyps = [_mk_tree_hyp(h, rng) for h in range(4)]
+    pb = scoring.pack_beam(hyps, 4, 12)
+    for kk, h in enumerate(hyps):
+        want = {n.idx for n in h.safe_prefix()}
+        got = {i for i in range(12) if pb.prefix_mask[kk, i] > 0}
+        assert got == want

@@ -56,29 +56,48 @@ def test_prefixspan_counts_exact():
     assert by_items[("a", "b", "c")] == 2
 
 
+def _occurs(seq, items, max_gap=2):
+    """Gap-bounded subsequence match over ALL occurrence chains (a greedy
+    earliest-occurrence scan is incomplete: in [a b a c] with max_gap=2 only
+    the second 'a' reaches 'c').  First item may start anywhere."""
+    poss = {j + 1 for j, x in enumerate(seq) if x == items[0]}
+    for it in items[1:]:
+        nxt = set()
+        for pos in poss:
+            for j in range(pos, min(len(seq), pos + max_gap)):
+                if seq[j] == it:
+                    nxt.add(j + 1)
+        poss = nxt
+        if not poss:
+            return False
+    return True
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.lists(st.lists(st.sampled_from("abcd"), min_size=1, max_size=8),
                 min_size=1, max_size=8))
 def test_prefixspan_support_sound(seqs):
     """Property: every mined pattern occurs (gap-bounded) in >= support seqs."""
     pats = prefixspan(seqs, min_support=2, max_len=4, max_gap=2)
-
-    def occurs(seq, items, max_gap=2):
-        pos = 0
-        for it in items:
-            found = False
-            for j in range(pos, min(len(seq), pos + max_gap)):
-                if seq[j] == it:
-                    pos = j + 1
-                    found = True
-                    break
-            if not found:
-                return False
-        return True
-
     for p in pats:
-        n = sum(occurs(s, p.items) for s in seqs)
+        n = sum(_occurs(s, p.items) for s in seqs)
         assert n >= p.support >= 2
+
+
+def test_prefixspan_all_occurrences_regression():
+    """Gap-bounded projection must track every in-window occurrence: with
+    max_gap=2, [a b a c] supports (a, c) via the second 'a' (adjacent to
+    'c'); keeping only the earliest 'a' made the pattern invisible."""
+    pats = prefixspan([list("abac")], min_support=1, max_len=3, max_gap=2)
+    by_items = {p.items: p.support for p in pats}
+    assert by_items.get(("a", "c")) == 1
+    assert by_items.get(("a", "b", "c")) == 1   # b->c skips one item, in gap
+    assert by_items.get(("c", "a")) is None     # order still respected
+    # two supporting sequences, one via a late re-occurrence each
+    pats2 = prefixspan([list("abac"), list("xaxc")], min_support=2,
+                       max_len=2, max_gap=2)
+    by2 = {p.items: p.support for p in pats2}
+    assert by2.get(("a", "c")) == 2
 
 
 def test_conditional_next_normalized():
@@ -295,3 +314,81 @@ def test_hypothesis_bounded():
         for n in h.safe_prefix():
             assert n.kind != NodeKind.MODEL
             assert not n.missing_args
+
+
+def test_tree_builder_emits_branching_subgraphs():
+    """Tree assembly: some hypothesis carries a branch point (an interior
+    tool node with >1 child), children split the parent's follow mass via
+    the empirical conditional probabilities, and every non-MODEL node has
+    at most one parent (unique root paths)."""
+    pe = _engine()
+    b = HypothesisBuilder(pe, assembly="tree", max_nodes=11)
+    eps = make_episodes(WorkloadConfig(seed=5, n_episodes=6))
+    traces = episodes_to_traces(eps)
+    branched = False
+    for tr in traces:
+        for cut in range(1, min(len(tr), 5)):
+            for h in b.build(tr[:cut], beam_width=8):
+                outdeg = {}
+                for i, j in h.edges:
+                    outdeg[i] = outdeg.get(i, 0) + 1
+                model_idx = [n.idx for n in h.nodes if n.kind == NodeKind.MODEL]
+                parents = h.parent_map()
+                for n in h.nodes:
+                    if n.idx not in model_idx:
+                        assert len(parents.get(n.idx, ())) <= 1
+                def first_tool_below(j):
+                    # follow PREP/BARRIER helpers down to the branch's tool
+                    while h.nodes[j].kind != NodeKind.TOOL:
+                        nxt = [b2 for a2, b2 in h.edges if a2 == j
+                               and b2 not in model_idx]
+                        if not nxt:
+                            return None
+                        j = nxt[0]
+                    return h.nodes[j]
+                for i, deg in outdeg.items():
+                    if deg > 1 and i not in model_idx:
+                        branched = True
+                        kids = [first_tool_below(j) for a, j in h.edges
+                                if a == i and j not in model_idx]
+                        mass = sum(k.cond_prob for k in kids if k is not None)
+                        assert mass <= 1.0 + 1e-9
+    assert branched
+
+
+def test_tree_builder_fills_beam_across_roots():
+    """Multi-root fill: with >1 predicted root, the beam holds hypotheses
+    for more than one distinct root tool (no first-root monopoly)."""
+    pe = _engine()
+    b = HypothesisBuilder(pe, assembly="tree")
+    eps = make_episodes(WorkloadConfig(seed=5, n_episodes=6))
+    traces = episodes_to_traces(eps)
+    best = 0
+    for tr in traces:
+        for cut in range(1, min(len(tr), 5)):
+            hyps = b.build(tr[:cut], beam_width=8)
+            roots = {h.nodes[0].tool if h.nodes[0].kind == NodeKind.TOOL
+                     else next(n.tool for n in h.nodes if n.kind == NodeKind.TOOL)
+                     for h in hyps}
+            best = max(best, len(roots))
+    assert best >= 2
+
+
+def test_safe_prefix_is_per_branch_frontier():
+    """A blocked branch (missing-args tool) must not cut off its sibling:
+    the prefix is a frontier region over the DAG, not a list prefix."""
+    from repro.core.events import ResourceVector
+    spec = DEFAULT_TOOLS["read"]
+    n0 = Node(0, NodeKind.TOOL, "read", spec.level, spec.rho, 1.0)
+    n1 = Node(1, NodeKind.TOOL, "edit", SafetyLevel.STAGED_WRITE,
+              ResourceVector(0.5, 1, 10, 0), 1.0, missing_args=("change",))
+    n2 = Node(2, NodeKind.TOOL, "parse", DEFAULT_TOOLS["parse"].level,
+              DEFAULT_TOOLS["parse"].rho, 2.0)
+    n3 = Node(3, NodeKind.TOOL, "grep", DEFAULT_TOOLS["grep"].level,
+              DEFAULT_TOOLS["grep"].rho, 1.5)
+    # read -> {edit(missing args) -> grep, parse}
+    h = BranchHypothesis(0, [n0, n1, n2, n3], [(0, 1), (0, 2), (1, 3)],
+                         q=0.9, context_key=("x",))
+    ids = {n.idx for n in h.safe_prefix()}
+    assert ids == {0, 2}          # sibling parse survives; edit subtree bounded
+    assert h.path_to(3) == [0, 1, 3]

@@ -116,3 +116,150 @@ def test_deterministic_across_runs(engine, episodes):
     m2 = run_mode(episodes, engine, "bpaste", THOR, seed=7)
     assert m1.makespan == m2.makespan
     assert m1.reuses == m2.reuses
+
+
+def test_beam_occupancy_tree_wider_than_chain(engine, episodes):
+    """Tree assembly + multi-root fill must widen the admission-time beam
+    over the linear-chain baseline on the default workload."""
+    ch = run_mode(episodes, engine, "bpaste", THOR, seed=7, assembly="chain")
+    tr = run_mode(episodes, engine, "bpaste", THOR, seed=7, assembly="tree")
+    s_ch, s_tr = ch.summary(), tr.summary()
+    assert s_tr["beam_occupancy"] > s_ch["beam_occupancy"]
+    assert s_tr["reuse_rate"] >= s_ch["reuse_rate"] - 0.05
+
+
+# ======================================================================
+# _finish_action carry-over / squash and _squash_one accounting
+# ======================================================================
+
+def _manual_runtime(engine, steps):
+    from repro.core.workload import Episode, Step
+    ep = Episode(0, "manual", [Step(1.0, t, dict(a)) for t, a in steps])
+    rt = BPasteRuntime([ep], engine, THOR, rcfg=RuntimeConfig(mode="bpaste"))
+    return rt, rt.episodes[0]
+
+
+def _mk_hyprun(rt, es, tools, context_key=("stale",)):
+    """Active HypRun over a linear hypothesis of READ_ONLY tool nodes."""
+    from repro.core.events import DEFAULT_TOOLS
+    from repro.core.hypothesis import BranchHypothesis, Node, NodeKind
+    from repro.core.runtime import HypRun, NodeRun
+    from repro.core.sandbox import Sandbox
+    nodes, edges = [], []
+    for i, t in enumerate(tools):
+        spec = DEFAULT_TOOLS[t]
+        nodes.append(Node(i, NodeKind.TOOL, t, spec.level, spec.rho,
+                          spec.base_latency))
+        if i:
+            edges.append((i - 1, i))
+    h = BranchHypothesis(9000 + len(es.hyp_runs), nodes, edges, q=0.9,
+                         context_key=context_key)
+    nrs = [NodeRun(n, {}, run_tool=n.tool) for n in nodes]
+    hr = HypRun(h, es.ep.eid, Sandbox(es.state, h.hid), nrs, eu=1.0,
+                parents=h.parent_map(), base_len=len(es.history))
+    es.hyp_runs.append(hr)
+    return hr
+
+
+def _drive_two_steps(rt, es):
+    """Put the episode mid-flight: history holds step 0, step 1 finishing."""
+    from repro.core.events import Event
+    s0 = es.ep.steps[0]
+    es.history.append(Event("tool", s0.tool, dict(s0.args), {"ok": 1}))
+    es.step_idx = 1
+    es.phase = "executing"
+
+
+def test_finish_action_keeps_branch_with_predicted_next_tool(engine):
+    """Carry-over: a stale-context branch whose next pending tool is still a
+    top prediction (and that has work invested) survives _finish_action."""
+    rt, es = _manual_runtime(engine, [
+        ("grep", {"pattern": "x"}), ("read", {"path": "p"}),
+        ("edit", {"path": "p", "change": "fix"}), ("test", {"target": "p"}),
+    ])
+    _drive_two_steps(rt, es)
+    preds = {pt.tool for pt, _ in engine.predict(
+        es.history + [__import__("repro.core.events", fromlist=["Event"]).Event(
+            "tool", "read", {"path": "p"})], top=8, backoff="merge")}
+    assert "edit" in preds and "build" not in preds   # sanity on the tables
+    kept = _mk_hyprun(rt, es, ["edit"])
+    kept.node_runs[0].status = "running"          # work invested
+    gone = _mk_hyprun(rt, es, ["build"])          # not predicted after read
+    gone.node_runs[0].status = "running"
+    rt._finish_action(es, {"ok": 1}, 1.0)
+    assert kept.status == "active"
+    assert gone.status == "squashed"
+
+
+def test_finish_action_squashes_branch_on_write_conflict(engine):
+    """State safety: authoritative writes into a branch's base read-set
+    invalidate the branch regardless of its predictions."""
+    rt, es = _manual_runtime(engine, [
+        ("grep", {"pattern": "x"}), ("read", {"path": "p"}),
+        ("edit", {"path": "p", "change": "fix"}), ("test", {"target": "p"}),
+    ])
+    _drive_two_steps(rt, es)
+    hr = _mk_hyprun(rt, es, ["edit"])
+    hr.node_runs[0].status = "running"
+    hr.sandbox.F.get("p")                         # base read -> read set
+    assert "F:p" in hr.sandbox.base_read_set
+    es.last_writes = {"F:p"}                      # authoritative write hits it
+    rt._finish_action(es, {"ok": 1}, 1.0)
+    assert hr.status == "squashed"
+
+
+def test_squash_mid_flight_accounting(engine):
+    """Squashing a branch with a running node books the partial burn into
+    BOTH spec and wasted seconds: wasted_frac stays in [0, 1] by
+    construction and running work is never lost from the denominator."""
+    rt, es = _manual_runtime(engine, [("grep", {"pattern": "x"}),
+                                      ("read", {"path": "p"})])
+    hr = _mk_hyprun(rt, es, ["read", "parse"])
+    nr = hr.node_runs[0]
+    job = rt.sim.new_job("spec:read[test]", nr.node.rho.as_array(), 5.0,
+                         speculative=True)
+    rt.sim.start(job)
+    job.executed_solo_seconds = 1.7               # mid-flight partial burn
+    nr.job, nr.status = job, "running"
+    rt._squash_one(es, hr)
+    m = rt.metrics
+    assert m.spec_solo_seconds == pytest.approx(1.7)
+    assert m.wasted_solo_seconds == pytest.approx(1.7)
+    assert 0.0 <= m.summary()["wasted_frac"] <= 1.0
+    assert nr.status == "pending" and nr.job is None
+    assert job.jid not in rt.sim.running          # actually preempted
+
+
+def test_commit_path_unstrands_promoted_descendants(engine):
+    """A committed promotion becomes 'reused': its children must pass the
+    launch-frontier ready test afterwards (a permanent 'promoted' status
+    stranded the whole subtree below every promotion)."""
+    rt, es = _manual_runtime(engine, [("grep", {"pattern": "x"}),
+                                      ("read", {"path": "p"})])
+    hr = _mk_hyprun(rt, es, ["read", "parse"])
+    hr.node_runs[0].status = "promoted"
+    hr.node_runs[0].result = {"path": "p"}
+    hr.node_runs[0].resolved_args = {"path": "p"}
+    assert rt._launch_frontier(hr) == []          # child gated pre-commit
+    rt._commit_path(es, hr, 0)
+    assert hr.node_runs[0].status == "reused"
+    assert rt._launch_frontier(hr) == [1]         # child launchable now
+
+
+def test_squash_done_node_books_work_once(engine):
+    """A done node's work entered spec_solo at completion; squash adds the
+    matching waste only (never a second spec contribution)."""
+    rt, es = _manual_runtime(engine, [("grep", {"pattern": "x"}),
+                                      ("read", {"path": "p"})])
+    hr = _mk_hyprun(rt, es, ["read"])
+    nr = hr.node_runs[0]
+    job = rt.sim.new_job("spec:read[test]", nr.node.rho.as_array(), 2.0,
+                         speculative=True)
+    job.executed_solo_seconds = 2.0
+    nr.job, nr.status = job, "done"
+    rt.metrics.spec_solo_seconds = 2.0            # booked by the done callback
+    rt._squash_one(es, hr)
+    m = rt.metrics
+    assert m.spec_solo_seconds == pytest.approx(2.0)
+    assert m.wasted_solo_seconds == pytest.approx(2.0)
+    assert m.summary()["wasted_frac"] == pytest.approx(1.0)
