@@ -20,8 +20,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation, bench_admission, bench_beam,
-                            bench_eval_plan, bench_kernels, bench_scheduler,
-                            bench_serving, bench_table1, roofline)
+                            bench_engine, bench_eval_plan, bench_kernels,
+                            bench_scheduler, bench_serving, bench_table1,
+                            roofline)
 
     if args.smoke:
         sections = [
@@ -30,6 +31,8 @@ def main() -> None:
              lambda: bench_admission.run(smoke=True)),
             ("beam (tree assembly occupancy/reuse)",
              lambda: bench_beam.run(smoke=True)),
+            ("serving (concurrent episodes, shared beam)",
+             lambda: bench_serving.run(smoke=True)),
             ("eval_plan (paper SS9 metrics, smoke)",
              lambda: bench_eval_plan.run(smoke=True)),
         ]
@@ -41,7 +44,8 @@ def main() -> None:
             ("scheduler (runtime overhead)", bench_scheduler.run),
             ("admission (fused vs reference)", bench_admission.run),
             ("beam (tree assembly occupancy/reuse)", bench_beam.run),
-            ("serving (B-PASTE x engine integration)", bench_serving.run),
+            ("serving (concurrent episodes, shared beam)", bench_serving.run),
+            ("engine (B-PASTE x serving engine integration)", bench_engine.run),
             ("kernels", bench_kernels.run),
             ("roofline (dry-run derived)", roofline.run),
         ]

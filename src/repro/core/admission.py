@@ -75,21 +75,34 @@ def greedy_admit(
     budget: np.ndarray,          # B (R,)
     authoritative_rho: np.ndarray,
     idle_window: float = 10.0,
+    weights: Optional[np.ndarray] = None,
 ) -> AdmissionResult:
     """Reference greedy: scoring dispatches (one per k_max chunk) + numpy
     re-pack PER admission iteration.  Semantics oracle for ``fused_admit``;
-    prefer the fused path in hot loops."""
+    prefer the fused path in hot loops.
+
+    ``weights`` (len(hyps),) are per-hypothesis fairness multipliers (shared
+    cross-episode beams weight each tenant's candidates by its current
+    speculative share).  EU is linear in q, so weighting EU post-score is
+    exactly weighting q — the greedy order, the eu>0 admission threshold
+    (weights are positive), and the recorded EU-at-admit all see q·w."""
     limit = np.minimum(slack, budget)
     admitted: List[BranchHypothesis] = []
     admitted_demand = np.zeros(RESOURCE_DIMS)
     eu_at_admit: dict = {}
     remaining = list(hyps)
+    w_by_hid = (
+        {h.hid: float(weights[i]) for i, h in enumerate(hyps)}
+        if weights is not None else None
+    )
     while remaining:
         # score_all chunks beams wider than scorer.k_max — every remaining
         # hypothesis gets a real EU, not the padded-table truncation
         eu = scorer.score_all(
             remaining, authoritative_rho + admitted_demand, idle_window
         )
+        if w_by_hid is not None:
+            eu = eu * np.array([w_by_hid[h.hid] for h in remaining])
         order = np.argsort(-eu)
         picked = None
         for oi in order:
@@ -121,7 +134,7 @@ def bucket_k(n: int, k_max: int) -> int:
 @functools.partial(jax.jit, static_argnames=("n_nodes",))
 def admit_beam(
     node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid,
-    auth_rho, cap, limit, lam, mu, idle_window, n_nodes: int,
+    w, auth_rho, cap, limit, lam, mu, idle_window, n_nodes: int,
 ):
     """Entire greedy admission pass as ONE jitted kernel.
 
@@ -134,6 +147,9 @@ def admit_beam(
 
     ΔO/ΔU are loop-invariant (they depend only on the hypothesis graph), so
     they are computed once up front; the loop re-evaluates only ΔI.
+
+    ``w`` (K,) are positive per-hypothesis fairness weights; EU is linear in
+    q so multiplying EU by w is identical to scoring with q·w.
 
     Returns (admitted_mask (K,), eu_at_admit (K,), admitted_demand (R,)).
     """
@@ -152,6 +168,7 @@ def admit_beam(
             l_solo, delta_o, delta_u, q, rho, k_valid,
             auth_rho + demand, cap, lam, mu, idle_window,
         )
+        eu = eu * w
         fits = jnp.all(demand[None, :] + rho <= fit_lim[None, :], axis=1)
         elig = (remaining > 0) & fits & (eu > 0.0)
         any_elig = jnp.any(elig)
@@ -175,7 +192,7 @@ def admit_beam(
 
 
 def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
-                 idle_window) -> Tuple[np.ndarray, np.ndarray]:
+                 idle_window, w=None) -> Tuple[np.ndarray, np.ndarray]:
     """The ``admit_beam`` algorithm on the same PackedBeam tables in pure
     numpy — the host-side fast path for tiny beams, where a single XLA
     dispatch (~1 ms on CPU) dwarfs the actual arithmetic.  The Eq. 3
@@ -198,6 +215,8 @@ def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
     delta_u = dist.max(axis=1)
 
     fit_lim = _fit_limit(limit)
+    if w is None:
+        w = np.ones(K)
     remaining = k_valid.copy()
     admitted = np.zeros(K)
     demand = np.zeros_like(np.asarray(auth_rho, float))
@@ -207,6 +226,7 @@ def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
             l_solo, delta_o, delta_u, q, rho, k_valid,
             auth_rho + demand, cap, lam, mu, idle_window, xp=np,
         )
+        eu = eu * w
         fits = np.all(demand[None, :] + rho <= fit_lim[None, :], axis=1)
         elig = (remaining > 0) & fits & (eu > 0.0)
         if not elig.any():
@@ -227,6 +247,7 @@ def fused_admit(
     idle_window: float = 10.0,
     packed: Optional[PackedBeam] = None,
     small_beam_threshold: int = 2,
+    weights: Optional[np.ndarray] = None,
 ) -> AdmissionResult:
     """Greedy admission via the fused ``admit_beam`` kernel: one XLA dispatch
     per admission pass (vs. one scoring dispatch per *iteration* in
@@ -235,25 +256,32 @@ def fused_admit(
     of any device dispatch exceeds the whole computation.  ``packed`` lets
     callers reuse a cached PackedBeam (see BPasteRuntime incremental
     packing); it must have been packed from exactly these ``hyps`` at a
-    bucketed K ≥ len(hyps)."""
+    bucketed K ≥ len(hyps).  ``weights`` (len(hyps),) are the per-hypothesis
+    fairness multipliers (see ``greedy_admit``) — NOT part of the packed
+    tables, so the PackedBeam cache stays valid as tenant shares move."""
     if not len(hyps):
         return AdmissionResult([], {}, [])
     limit = np.minimum(slack, budget)
     if packed is None or packed.q.shape[0] < len(hyps):
         packed = pack_beam(hyps, bucket_k(len(hyps), scorer.k_max), scorer.n_max)
     cap = scorer.machine.cap_array()
+    K = packed.q.shape[0]
+    w_pad = np.ones(K)
+    if weights is not None:
+        w_pad[: len(hyps)] = np.asarray(weights, float)
     if len(hyps) <= small_beam_threshold:
         admitted_mask, eu_adm = _admit_numpy(
             packed, np.asarray(authoritative_rho, float), cap,
             np.asarray(limit, float), scorer.lam, scorer.mu, idle_window,
+            w=w_pad,
         )
     else:
         admitted_mask, eu_adm, _ = admit_beam(
             packed.node_lat, packed.node_prob, packed.node_mask,
             packed.prefix_mask, packed.adj, packed.q, packed.rho, packed.k_valid,
-            jnp.asarray(authoritative_rho), jnp.asarray(cap),
-            jnp.asarray(limit), scorer.lam, scorer.mu, idle_window,
-            n_nodes=scorer.n_max,
+            jnp.asarray(w_pad), jnp.asarray(authoritative_rho),
+            jnp.asarray(cap), jnp.asarray(limit), scorer.lam, scorer.mu,
+            idle_window, n_nodes=scorer.n_max,
         )
         admitted_mask = np.asarray(admitted_mask)
         eu_adm = np.asarray(eu_adm)

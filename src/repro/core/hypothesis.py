@@ -181,6 +181,14 @@ class HypothesisBuilder:
     assembly: str = "tree"        # "tree" | "chain" (pre-tree linear baseline)
     _next_hid: itertools.count = field(default_factory=itertools.count)
 
+    def _context_key(self, history: Sequence[Event]) -> Tuple:
+        """Signature suffix identifying the build context — as long as the
+        engine's mining context (NOT a hard-coded 2: an engine configured
+        with a different ``context_len`` must produce keys the runtime's
+        carry-over classification can compare against its own tails)."""
+        cl = self.engine.context_len
+        return tuple(signature(e) for e in history[-cl:]) if cl > 0 else ()
+
     def _tool_node(self, idx: int, pt: PatternTuple, cond: float) -> Node:
         spec = self.tools[pt.tool]
         return Node(
@@ -326,7 +334,7 @@ class HypothesisBuilder:
                           model_spec.rho, model_spec.base_latency))
         for leaf in leaves:
             edges.append((leaf, idx))
-        hist_key = tuple(signature(e) for e in history[-2:])
+        hist_key = self._context_key(history)
         return BranchHypothesis(
             hid=next(self._next_hid), nodes=nodes, edges=edges, q=q,
             context_key=hist_key, created_t=now,
@@ -404,7 +412,7 @@ class HypothesisBuilder:
                           model_spec.rho, model_spec.base_latency))
         if prev is not None:
             edges.append((prev, idx))
-        hist_key = tuple(signature(e) for e in history[-2:])
+        hist_key = self._context_key(history)
         return BranchHypothesis(
             hid=next(self._next_hid), nodes=nodes, edges=edges, q=q,
             context_key=hist_key, created_t=now,

@@ -124,19 +124,23 @@ def mine_bindings(
     for arg in arg_names:
         best: Optional[ArgBinding] = None
         best_frac = 0.0
+        # hit fractions denominate over ALL occurrences carrying the arg:
+        # an offset only reachable in a few occurrences (len(hist) < off
+        # elsewhere) must not score its hits against that tiny sample — a
+        # frac-1.0-of-2 binding would beat a frac-0.9-of-20 one and resolve
+        # garbage on the 18 histories where its source event doesn't exist
+        n_arg = sum(1 for _, args in occs if arg in args)
         for off in range(1, lookback + 1):
             # tally candidate (field, transform) hits across occurrences
             tallies: Dict[Tuple[Optional[str], str], int] = {}
-            total = 0
             for hist, args in occs:
                 if arg not in args or len(hist) < off:
                     continue
-                total += 1
                 for fieldname, tname, tv in _candidate_values(hist[-off]):
                     if tv == args[arg]:
                         tallies[(fieldname, tname)] = tallies.get((fieldname, tname), 0) + 1
             for (fieldname, tname), hits in tallies.items():
-                frac = hits / max(total, 1)
+                frac = hits / max(n_arg, 1)
                 # prefer equally-reliable bindings with EARLIER sources: their
                 # inputs materialize sooner, so branch nodes can launch while
                 # later tools are still in flight

@@ -10,10 +10,15 @@ Per tick (any job start/finish/preempt):
   Phase 2  Protect — if authoritative demand exceeds capacity, preempt
            speculative jobs in ascending admission-EU order.
   Phase 3  Run authoritative jobs (primary FIFO policy, untouched).
-  Phase 4  Opportunistic branch scheduling — refresh the beam, score EU
-           (Eq. 3), greedily admit the highest-value branch *prefixes*
-           under min(R_slack, B); admitted prefixes run as preemptible
-           speculative jobs inside CoW sandboxes.
+  Phase 4  Opportunistic branch scheduling — refresh each active episode's
+           beam, pool the idle candidates from ALL episodes into one shared
+           cross-episode beam, score EU (Eq. 3) with per-tenant fairness
+           weights, and greedily admit the highest-value branch *prefixes*
+           under min(R_slack, B) in ONE fused pass per tick (per-episode
+           passes each saw slack that ignored demand a sibling episode had
+           just admitted but not launched — cross-tenant double-booking);
+           admitted prefixes run as preemptible speculative jobs inside CoW
+           sandboxes.
 
 Modes:
   "bpaste"   — full system (beam of branch hypotheses, EU objective)
@@ -35,6 +40,7 @@ import numpy as np
 import time
 
 from repro.core.admission import bucket_k, fused_admit, greedy_admit
+from repro.core.scoring import tenant_fairness_weights
 from repro.core.events import (
     DEFAULT_TOOLS, RESOURCE_DIMS, Event, ResourceVector, SafetyLevel, ToolSpec,
     signature,
@@ -90,7 +96,7 @@ class EpisodeState:
     state: AgentState
     history: List[Event] = field(default_factory=list)
     step_idx: int = 0
-    phase: str = "init"           # reasoning|acting|done
+    phase: str = "init"           # init|reasoning|acting|executing|done
     t_start: float = 0.0
     t_end: float = 0.0
     pending_action: Optional[Tuple[str, Dict[str, Any]]] = None
@@ -99,10 +105,11 @@ class EpisodeState:
     last_writes: set = field(default_factory=set)
     hyp_runs: List[HypRun] = field(default_factory=list)
     auth_queue: List[SimJob] = field(default_factory=list)
-    # incremental beam packing: PackedBeam reused across ticks while the
-    # candidate beam (hypothesis ids + node statuses) is unchanged
-    packed_beam: Optional[PackedBeam] = None
-    packed_sig: Optional[Tuple] = None
+    # env_warmup effect horizon, PER TENANT: warmth lives in the episode's
+    # own environment, so one tenant's env_warmup must not discount another
+    # tenant's cold tools (a global scalar did exactly that under
+    # concurrency > 1)
+    warm_until: float = -1.0
 
 
 @dataclass
@@ -125,6 +132,10 @@ class RuntimeConfig:
     seed: int = 0
     warm_discount: float = 0.65   # prep-node payoff on cold tools (§4.1)
     warm_ttl: float = 120.0
+    fairness_alpha: float = 1.0   # shared-beam fairness: tenants already
+                                  # holding speculative capacity get their
+                                  # candidates' EU discounted by
+                                  # 1/(1+alpha*share); 0 disables
 
 
 @dataclass
@@ -141,9 +152,24 @@ class Metrics:
     qos_violations: int = 0
     auth_slowdown_samples: List[float] = field(default_factory=list)
     auth_actions: int = 0
-    # occupied beam slots (active hypotheses, launchable or mid-flight) at
-    # each admission pass — beam fullness against the beam_k slot cap, NOT
-    # the per-pass candidate count (candidates drain as nodes launch)
+    # simulation stopped on max_time/max_steps with work outstanding —
+    # makespan/latency figures are lower bounds, not results
+    truncated: bool = False
+    # per-tenant breakdowns (tenant == episode): service latency (launch ->
+    # done), sojourn (ARRIVAL -> done, i.e. queueing delay included — the
+    # honest serving metric under staggered arrivals, where a tenant can
+    # wait far longer for a slot than it spends in service), the
+    # speculation-attributable slowdown samples of the tenant's own
+    # authoritative jobs, and its QoS violations — fairness is judged on
+    # the WORST tenant, which the pooled means above can hide
+    tenant_latency: Dict[int, float] = field(default_factory=dict)
+    tenant_sojourn: Dict[int, float] = field(default_factory=dict)
+    tenant_slowdown_samples: Dict[int, List[float]] = field(default_factory=dict)
+    tenant_qos_violations: Dict[int, int] = field(default_factory=dict)
+    # occupied beam slots (active hypotheses, launchable or mid-flight,
+    # summed over all active episodes) at each shared admission pass —
+    # beam fullness against the per-episode beam_k slot cap, NOT the
+    # per-pass candidate count (candidates drain as nodes launch)
     beam_occupancy_samples: List[int] = field(default_factory=list)
     # scheduler self-overhead: wall time burned inside admission per tick
     sched_admit_calls: int = 0
@@ -181,6 +207,40 @@ class Metrics:
                 self.sched_pack_hits
                 / max(self.sched_pack_hits + self.sched_pack_misses, 1)
             ),
+            "truncated": float(self.truncated),
+            "worst_tenant_latency": (
+                max(self.tenant_latency.values()) if self.tenant_latency else 0.0
+            ),
+            "p95_sojourn": (
+                float(np.percentile(list(self.tenant_sojourn.values()), 95))
+                if self.tenant_sojourn else 0.0
+            ),
+            "worst_tenant_sojourn": (
+                max(self.tenant_sojourn.values()) if self.tenant_sojourn else 0.0
+            ),
+            "worst_tenant_slowdown": (
+                max(float(np.mean(s)) for s in self.tenant_slowdown_samples.values())
+                if self.tenant_slowdown_samples else 1.0
+            ),
+        }
+
+    def per_tenant(self) -> Dict[int, Dict[str, float]]:
+        """Per-tenant serving breakdown: service latency, arrival-inclusive
+        sojourn, mean slowdown of the tenant's own authoritative jobs, and
+        its QoS violations."""
+        eids = (set(self.tenant_latency) | set(self.tenant_slowdown_samples)
+                | set(self.tenant_qos_violations))
+        return {
+            eid: {
+                "latency": self.tenant_latency.get(eid, 0.0),
+                "sojourn": self.tenant_sojourn.get(eid, 0.0),
+                "mean_auth_slowdown": (
+                    float(np.mean(self.tenant_slowdown_samples[eid]))
+                    if self.tenant_slowdown_samples.get(eid) else 1.0
+                ),
+                "qos_violations": float(self.tenant_qos_violations.get(eid, 0)),
+            }
+            for eid in sorted(eids)
         }
 
 
@@ -215,15 +275,21 @@ class BPasteRuntime:
         self.scorer = Scorer(machine, lam=rcfg.lam, mu=rcfg.mu,
                              k_max=rcfg.beam_k, n_max=rcfg.max_nodes)
         self.metrics = Metrics()
-        self.warm_until: float = -1.0         # env_warmup effect horizon
         self.episodes = [EpisodeState(ep, AgentState()) for ep in episodes]
         self._wave_ptr = 0
+        # shared-beam incremental packing: ONE PackedBeam cache for the
+        # pooled cross-episode candidate beam (hids are globally unique —
+        # a single builder numbers every episode's hypotheses)
+        self._packed_beam: Optional[PackedBeam] = None
+        self._packed_sig: Optional[Tuple] = None
+        self._arrival_timer: Optional[SimJob] = None
         self.sim = Simulator(machine, self._tick)
 
     # ==================================================================
     def run(self) -> Metrics:
         self._launch_wave()
         self.sim.run()
+        self.metrics.truncated = self.sim.truncated is not None
         self.metrics.makespan = self.sim.now
         self.metrics.serial_reference = sum(
             es.ep.serial_latency(self.tools) for es in self.episodes
@@ -240,11 +306,36 @@ class BPasteRuntime:
         while (active < self.rcfg.max_concurrent_episodes
                and self._wave_ptr < len(self.episodes)):
             es = self.episodes[self._wave_ptr]
+            arrival = getattr(es.ep, "arrival", 0.0)
+            if arrival > self.sim.now + 1e-9:
+                # staggered tenant hasn't arrived yet: park the wave and wake
+                # at its arrival time (episodes are in arrival order)
+                self._schedule_arrival(arrival)
+                break
             self._wave_ptr += 1
             es.t_start = self.sim.now
             es.phase = "reasoning"
             self._start_model_step(es)
             active += 1
+
+    def _schedule_arrival(self, t: float):
+        """Zero-demand wake-up timer for the next pending tenant arrival —
+        the event-driven sim would otherwise go quiescent (or never see the
+        arrival) whenever no job completion lands between now and ``t``.
+        Zero demand means no interference and no QoS sample pollution (the
+        ``timer`` meta flag excludes it from slowdown attribution)."""
+        if (self._arrival_timer is not None
+                and self._arrival_timer.jid in self.sim.running):
+            return                        # a timer for this arrival is live
+        def fire(sim: Simulator, job: SimJob):
+            self._arrival_timer = None
+            self._launch_wave()
+        self._arrival_timer = self.sim.new_job(
+            "arrival_timer", np.zeros(RESOURCE_DIMS),
+            max(t - self.sim.now, 1e-9), speculative=False,
+            on_complete=fire, meta={"timer": True},
+        )
+        self.sim.start(self._arrival_timer)
 
     # ==================================================================
     # episode driving (authoritative path)
@@ -259,6 +350,7 @@ class BPasteRuntime:
         job = self.sim.new_job(
             f"model[e{es.ep.eid}.{es.step_idx}]", spec.rho.as_array(),
             step.model_work, speculative=False, on_complete=done,
+            meta={"eid": es.ep.eid},
         )
         self.sim.start(job)
 
@@ -268,10 +360,14 @@ class BPasteRuntime:
         es.phase = "acting"
         # Phase 1 happens inside the tick that follows this completion.
 
-    def _finish_action(self, es: EpisodeState, result: Any, dur_solo: float):
+    def _finish_action(self, es: EpisodeState, result: Any, t_start: float):
+        """``t_start`` is the action's WALL start time (``job.started_at``) —
+        ``now - solo_work`` understated the start under co-run interference
+        (stretched jobs span more wall time than their solo work) and was
+        plain wrong for promoted jobs, which started before the agent asked."""
         step = es.ep.steps[es.step_idx]
         ev = Event("tool", step.tool, dict(step.args), result,
-                   self.sim.now - dur_solo, self.sim.now, es.ep.eid)
+                   t_start, self.sim.now, es.ep.eid)
         es.history.append(ev)
         es.state.history.append(ev)
         es.pending_action = None
@@ -287,6 +383,12 @@ class BPasteRuntime:
             es.phase = "done"
             es.t_end = self.sim.now
             self.metrics.episode_latencies.append(es.t_end - es.t_start)
+            self.metrics.tenant_latency[es.ep.eid] = es.t_end - es.t_start
+            # sojourn counts from ARRIVAL: a tenant that queued for a slot
+            # waited that long too, and the service-only latency above would
+            # hide it (dominant under staggered multi-tenant load)
+            self.metrics.tenant_sojourn[es.ep.eid] = (
+                es.t_end - getattr(es.ep, "arrival", 0.0))
             self._squash_all(es)
             self._launch_wave()
         else:
@@ -301,7 +403,7 @@ class BPasteRuntime:
         spec = self.tools[tool]
         es.inflight = (tool, dict(args))
         dur = spec.det_latency(args)
-        if tool in self.COLD_TOOLS and self.sim.now <= self.warm_until:
+        if tool in self.COLD_TOOLS and self.sim.now <= es.warm_until:
             dur *= self.rcfg.warm_discount    # preparation-node payoff
 
         def done(sim: Simulator, job: SimJob):
@@ -310,11 +412,11 @@ class BPasteRuntime:
             es.last_writes = set(fac.writes)
             if spec.level >= SafetyLevel.STAGED_WRITE:
                 es.state.bump()
-            self._finish_action(es, result, job.work)
+            self._finish_action(es, result, job.started_at or 0.0)
 
         job = self.sim.new_job(
             f"{tool}[e{es.ep.eid}.{es.step_idx}]", spec.rho.as_array(), dur,
-            speculative=False, on_complete=done,
+            speculative=False, on_complete=done, meta={"eid": es.ep.eid},
         )
         es.auth_queue.append(job)
 
@@ -413,7 +515,7 @@ class BPasteRuntime:
                     self.metrics.prefix_reuses += 1
                 es.phase = "executing"
                 es.pending_action = None
-                self._finish_action(es, nr.result, 0.0)
+                self._finish_action(es, nr.result, self.sim.now)
             elif nr.status == "running" and nr.job is not None:
                 # promote: job becomes authoritative, non-preemptible
                 nr.job.speculative = False
@@ -428,7 +530,7 @@ class BPasteRuntime:
                     nr2 = hr.node_runs[i]
                     self._snapshot(hr, nr2)
                     self._commit_path(es, hr, i)
-                    self._finish_action(es, nr2.result, job.work)
+                    self._finish_action(es, nr2.result, job.started_at or 0.0)
 
                 nr.job.meta["promoted_for"] = es.ep.eid
                 # chain our completion behind the existing callback
@@ -482,8 +584,14 @@ class BPasteRuntime:
         current context nor still speculating toward a top prediction
         (carry-over horizon matches what the builder would seed: merged
         backoff up to beam_k under tree assembly)."""
-        tail = tuple(signature(e) for e in hist[-2:])
-        tail1 = tail[-1:] if tail else ()
+        # context tails at every backoff length the builder/engine can key
+        # on — 1..engine.context_len, NOT a hard-coded 2: with a different
+        # mining context length the builder stamps longer/shorter
+        # context_keys, and comparing them against a 2-suffix misclassified
+        # every carried-over branch (wrongly squashed or wrongly kept)
+        cl = max(self.engine.context_len, 1)
+        tail = tuple(signature(e) for e in hist[-cl:])
+        tails = {tail[-l:] for l in range(1, len(tail) + 1)} or {()}
         if self.builder.assembly == "tree":
             pred_pairs = self.engine.predict(hist, top=self.rcfg.beam_k,
                                              backoff="merge")
@@ -502,7 +610,7 @@ class BPasteRuntime:
                 for nr in hr.node_runs
             )
             if not (conflicted or contradicted):
-                if hr.hyp.context_key in (tail, tail1):
+                if hr.hyp.context_key in tails:
                     continue                  # built for this context
                 if self._still_predicted(hr, preds):
                     continue
@@ -665,15 +773,37 @@ class BPasteRuntime:
     # Phase 4: opportunistic branch scheduling
     # ==================================================================
     def _phase4(self):
+        """Shared cross-episode admission: refresh every active episode's
+        beam, pool the idle candidates, run ONE fused admission pass against
+        the machine-global slack/budget.  Per-episode passes inside the same
+        tick each measured slack *before* sibling episodes' admissions
+        launched, so two tenants could both be admitted against the same
+        slack (cross-tenant double-booking); a single pass accumulates the
+        admitted demand across tenants inside the greedy loop."""
         if self.rcfg.mode == "serial":
             return
+        pool: List[Tuple[EpisodeState, HypRun]] = []
+        n_active = 0
         for es in self.episodes:
             if es.phase not in ("reasoning", "executing"):
                 continue
             if not es.history:
                 continue
             self._refresh_beam(es)
-            self._admit(es)
+            active = [hr for hr in es.hyp_runs if hr.status == "active"]
+            n_active += len(active)
+            # admission (re-)scores IDLE branches only: a branch with
+            # running nodes was already admitted — its demand conditions
+            # this pass via spec_rho, its meta_admitted persists, and
+            # _launch_nodes keeps launching its ready siblings without
+            # re-admission (scoring it again would double-charge its
+            # in-flight demand against the packed prefix rho)
+            pool.extend(
+                (es, hr) for hr in active
+                if not any(nr.status == "running" for nr in hr.node_runs)
+                and self._launch_frontier(es, hr)
+            )
+        self._admit_shared(pool, n_active)
         self._launch_nodes()
 
     def _remaining_key(self, node_runs_or_nodes):
@@ -741,40 +871,59 @@ class BPasteRuntime:
             active.append(hr)
             have.add(key)
 
-    def _packed_for(self, es: EpisodeState, cand: List[HypRun]) -> PackedBeam:
-        """Incremental beam packing: re-pack only when the candidate beam
-        actually changed, otherwise reuse the cached PackedBeam — beams are
-        stable across most ticks.  The ordered hid tuple fully determines
-        the packed tables: hids are globally unique and BranchHypothesis is
-        immutable after build (node statuses live on NodeRun, which
-        pack_beam never reads)."""
+    def _packed_for(self, cand: List[HypRun]) -> PackedBeam:
+        """Incremental beam packing: re-pack only when the pooled candidate
+        beam actually changed, otherwise reuse the cached PackedBeam — beams
+        are stable across most ticks.  The ordered hid tuple fully
+        determines the packed tables even when candidates from several
+        EpisodeStates share one pack: hids are globally unique across
+        episodes (one builder numbers every hypothesis) and BranchHypothesis
+        is immutable after build (node statuses live on NodeRun, which
+        pack_beam never reads; fairness weights are passed alongside, not
+        packed)."""
         sig = tuple(hr.hyp.hid for hr in cand)
-        if es.packed_sig == sig and es.packed_beam is not None:
+        if self._packed_sig == sig and self._packed_beam is not None:
             self.metrics.sched_pack_hits += 1
-            return es.packed_beam
+            return self._packed_beam
         self.metrics.sched_pack_misses += 1
         k = bucket_k(len(cand), self.scorer.k_max)
-        es.packed_beam = pack_beam([hr.hyp for hr in cand], k, self.scorer.n_max)
-        es.packed_sig = sig
-        return es.packed_beam
+        self._packed_beam = pack_beam([hr.hyp for hr in cand], k, self.scorer.n_max)
+        self._packed_sig = sig
+        return self._packed_beam
 
-    def _admit(self, es: EpisodeState):
-        # admission (re-)scores IDLE branches only: a branch with running
-        # nodes was already admitted — its demand conditions this pass via
-        # spec_rho below, its meta_admitted persists, and _launch_nodes
-        # keeps launching its ready siblings without re-admission (scoring
-        # it again would double-charge its in-flight demand against the
-        # packed prefix rho)
-        active = [hr for hr in es.hyp_runs if hr.status == "active"]
-        cand = [hr for hr in active
-                if self._launch_frontier(hr)
-                and not any(nr.status == "running" for nr in hr.node_runs)]
+    def _fairness_weights(
+        self, pool: List[Tuple[EpisodeState, HypRun]]
+    ) -> Optional[np.ndarray]:
+        """Per-candidate EU multipliers for the shared beam: tenants already
+        holding in-flight speculative capacity get discounted so one
+        episode's deep tree cannot starve another's candidates round after
+        round.  Returns None (exactly the unweighted pass) when fairness is
+        off or only one tenant has candidates — a uniform weight is a common
+        positive factor and cannot change decisions, so skipping it keeps
+        single-episode runs bit-identical to the pre-shared-beam path."""
+        eids = [es.ep.eid for es, _ in pool]
+        if self.rcfg.fairness_alpha <= 0 or len(set(eids)) < 2:
+            return None
+        cap = self.machine.cap_array()
+        share: Dict[int, float] = {eid: 0.0 for eid in eids}
+        for j in self.sim.running.values():
+            if not j.speculative:
+                continue
+            eid = j.meta.get("eid")
+            if eid in share:
+                share[eid] += float(np.max(j.demand / cap))
+        w = tenant_fairness_weights(share, self.rcfg.fairness_alpha)
+        return np.array([w[eid] for eid in eids])
+
+    def _admit_shared(self, pool: List[Tuple[EpisodeState, HypRun]],
+                      n_active: int):
+        cand = [hr for _, hr in pool]
         if not cand:
             return
         # beam fullness when an admission pass actually runs: every active
-        # hypothesis occupies one of the beam_k slots, whether launchable
-        # this tick or mid-flight (see Metrics.beam_occupancy_samples)
-        self.metrics.beam_occupancy_samples.append(len(active))
+        # hypothesis across every active episode occupies a slot, whether
+        # launchable this tick or mid-flight (Metrics.beam_occupancy_samples)
+        self.metrics.beam_occupancy_samples.append(n_active)
         # ALL in-flight speculative demand is part of the conditioning
         # state: it stretches candidates (ΔI), consumes the budget B, and
         # shrinks the slack exactly like admitted-set demand (candidates
@@ -786,22 +935,21 @@ class BPasteRuntime:
         if self.rcfg.mode == "parallel":
             for hr in cand:
                 hr.eu = hr.hyp.q
-            cand.sort(key=lambda hr: -hr.hyp.q)
-            for hr in cand:
                 hr.meta_admitted = True
             return
+        weights = self._fairness_weights(pool)
         hyps = [hr.hyp for hr in cand]
         t0 = time.perf_counter()
         if self.rcfg.admission == "reference":
             res = greedy_admit(
                 hyps, self.scorer, slack, budget, auth_rho,
-                idle_window=self.rcfg.idle_window,
+                idle_window=self.rcfg.idle_window, weights=weights,
             )
         else:
             res = fused_admit(
                 hyps, self.scorer, slack, budget, auth_rho,
                 idle_window=self.rcfg.idle_window,
-                packed=self._packed_for(es, cand),
+                packed=self._packed_for(cand), weights=weights,
             )
         self.metrics.sched_admit_seconds += time.perf_counter() - t0
         self.metrics.sched_admit_calls += 1
@@ -813,7 +961,7 @@ class BPasteRuntime:
             else:
                 hr.meta_admitted = False
 
-    def _launch_frontier(self, hr: HypRun) -> List[int]:
+    def _launch_frontier(self, es: EpisodeState, hr: HypRun) -> List[int]:
         """Indices of every launchable (TOOL/PREP) node on the branch's
         ready frontier: pending nodes whose executable ancestors along the
         root path are all done/reused.  A running or blocked node gates only
@@ -850,7 +998,7 @@ class BPasteRuntime:
             if kind == NodeKind.TOOL and nr.node.missing_args:
                 open_[i], ready[i], preponly[i] = True, rd, True
                 continue
-            if kind == NodeKind.PREP and nr.status == "pending"                     and nr.run_tool == "env_warmup" and self.sim.now <= self.warm_until:
+            if kind == NodeKind.PREP and nr.status == "pending"                     and nr.run_tool == "env_warmup" and self.sim.now <= es.warm_until:
                 nr.status = "reused"          # already warm — prep is a no-op
             if nr.status == "pending" and rd and (kind == NodeKind.PREP or not po):
                 out.append(i)
@@ -869,7 +1017,7 @@ class BPasteRuntime:
             for hr in es.hyp_runs:
                 if hr.status != "active" or not getattr(hr, "meta_admitted", False):
                     continue
-                for i in self._launch_frontier(hr):
+                for i in self._launch_frontier(es, hr):
                     ready.append((-hr.eu, hr.hyp.hid, i, es, hr))
         ready.sort(key=lambda t: t[:3])
         for _, _, i, es, hr in ready:
@@ -888,13 +1036,14 @@ class BPasteRuntime:
                 return False                  # inputs not materialized yet
         spec = self.tools[nr.run_tool]
         dur = spec.det_latency(nr.resolved_args)
-        if nr.run_tool in self.COLD_TOOLS and self.sim.now <= self.warm_until:
+        if nr.run_tool in self.COLD_TOOLS and self.sim.now <= es.warm_until:
             dur *= self.rcfg.warm_discount
 
         def done(sim: Simulator, job: SimJob, es=es, hr=hr, i=i):
             nr2 = hr.node_runs[i]
             if nr2.run_tool == "env_warmup":
-                self.warm_until = max(self.warm_until, sim.now + self.rcfg.warm_ttl)
+                # warmth is tenant-local: this episode's environment only
+                es.warm_until = max(es.warm_until, sim.now + self.rcfg.warm_ttl)
             if hr.status != "active" and nr2.status != "promoted":
                 return
             fac = StateFacade(hr.sandbox)
@@ -913,7 +1062,8 @@ class BPasteRuntime:
         job = self.sim.new_job(
             f"spec:{nr.run_tool}[h{hr.hyp.hid}.{i}]",
             spec.rho.as_array(), dur, speculative=True, on_complete=done,
-            meta={"eu": hr.eu, "node_run": nr, "hyp": hr.hyp.hid},
+            meta={"eu": hr.eu, "node_run": nr, "hyp": hr.hyp.hid,
+                  "eid": es.ep.eid},
         )
         nr.job = job
         nr.status = "running"
@@ -926,8 +1076,10 @@ class BPasteRuntime:
         self._phase2()
         self._phase3()
         self._phase4()
-        # QoS accounting: authoritative slowdown attributable to speculation
-        dem = [j for j in sim.running.values()]
+        # QoS accounting: authoritative slowdown attributable to speculation,
+        # attributed per tenant (arrival timers are zero-demand bookkeeping
+        # jobs — they would dilute the samples with 1.0 ratios)
+        dem = [j for j in sim.running.values() if not j.meta.get("timer")]
         if dem and any(j.speculative for j in dem):
             from repro.core.interference import slowdowns as _sl
             auth = [j for j in dem if not j.speculative]
@@ -936,12 +1088,21 @@ class BPasteRuntime:
                 slows_all = _sl(mat_all, self.machine.cap_array())
                 mat_auth = np.stack([j.demand for j in auth])
                 slows_auth = _sl(mat_auth, self.machine.cap_array())
-                auth_all = [s for j, s in zip(dem, slows_all) if not j.speculative]
-                for s_with, s_without in zip(auth_all, slows_auth):
-                    ratio = s_with / max(s_without, 1e-9)
-                    self.metrics.auth_slowdown_samples.append(float(ratio))
+                auth_all = [(j, s) for j, s in zip(dem, slows_all)
+                            if not j.speculative]
+                for (j, s_with), s_without in zip(auth_all, slows_auth):
+                    ratio = float(s_with / max(s_without, 1e-9))
+                    self.metrics.auth_slowdown_samples.append(ratio)
+                    eid = j.meta.get("eid")
+                    if eid is not None:
+                        self.metrics.tenant_slowdown_samples.setdefault(
+                            eid, []).append(ratio)
                     if ratio > 1.05:
                         self.metrics.qos_violations += 1
+                        if eid is not None:
+                            self.metrics.tenant_qos_violations[eid] = (
+                                self.metrics.tenant_qos_violations.get(eid, 0)
+                                + 1)
 
 
 def run_mode(

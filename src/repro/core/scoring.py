@@ -196,6 +196,29 @@ def score_beam(
     return eu, delta_o, delta_u, delta_i
 
 
+def tenant_fairness_weights(
+    spec_share: dict, alpha: float = 1.0
+) -> dict:
+    """Per-tenant multiplier for the shared cross-episode beam's EU objective.
+
+    ``spec_share[eid]`` is tenant eid's current in-flight speculative demand,
+    bottleneck-normalized (max over dimensions of demand/cap, summed over the
+    tenant's running speculative jobs).  The weight
+
+        w_e = 1 / (1 + α · share_e)
+
+    discounts candidates from tenants already holding speculative capacity,
+    so one episode's deep tree cannot monopolize the shared beam round after
+    round while other tenants' candidates starve.  EU is linear in q, so
+    applying w_e to EU equals scoring with q·w_e (admission.py threads the
+    weights through every admission path identically).  Weights are positive
+    and ≤ 1; with a single tenant — or α=0 — every weight is a common
+    positive factor, which leaves the greedy order and the eu>0 threshold
+    unchanged (single-episode admissions are bit-identical to unweighted)."""
+    return {eid: 1.0 / (1.0 + alpha * max(float(s), 0.0))
+            for eid, s in spec_share.items()}
+
+
 @dataclass
 class Scorer:
     machine: Machine

@@ -14,6 +14,7 @@ preemptible and reclaimable).
 from __future__ import annotations
 
 import itertools
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -56,6 +57,8 @@ class Simulator:
         self._jid = itertools.count()
         self.log: List[tuple] = []
         self.slow_samples: List[float] = []   # co-run slowdown ratio samples
+        self.truncated: Optional[str] = None  # "max_time"|"max_steps" when
+                                              # run() stopped before drain
 
     # ------------------------------------------------------------------
     def new_job(self, name: str, demand: np.ndarray, work: float, *,
@@ -126,11 +129,31 @@ class Simulator:
                 j.on_complete(self, j)
         return True
 
-    def run(self, max_time: float = 1e7, max_steps: int = 2_000_000):
+    def run(self, max_time: float = 1e7, max_steps: int = 2_000_000) -> bool:
+        """Drive to quiescence.  Returns True when the simulation drained
+        (no runnable jobs left); False when it hit ``max_time``/``max_steps``
+        with work still outstanding — the stop reason lands in
+        ``self.truncated`` and a warning fires, so downstream makespans can't
+        silently report a truncated clock as a completed run."""
+        self.truncated = None
         self.tick(self)
         steps = 0
-        while self.now < max_time and steps < max_steps:
+        while True:
+            if self.now >= max_time:
+                self.truncated = "max_time"
+                break
+            if steps >= max_steps:
+                self.truncated = "max_steps"
+                break
             if not self.step():
                 break
             self.tick(self)
             steps += 1
+        if self.truncated is not None and not self.running:
+            self.truncated = None        # cap hit exactly at drain — complete
+        if self.truncated is not None:
+            warnings.warn(
+                f"Simulator.run stopped on {self.truncated} at t={self.now:.1f} "
+                f"with {len(self.running)} job(s) still running; makespan is "
+                f"a lower bound", RuntimeWarning, stacklevel=2)
+        return self.truncated is None

@@ -41,6 +41,9 @@ class Episode:
     eid: int
     kind: str
     steps: List[Step]
+    arrival: float = 0.0          # tenant arrival time (0 = present at t=0);
+                                  # the runtime launches an episode no
+                                  # earlier than its arrival
 
     def serial_latency(self, tools=DEFAULT_TOOLS) -> float:
         return sum(s.model_work + tools[s.tool].det_latency(s.args) for s in self.steps)
@@ -163,12 +166,18 @@ class WorkloadConfig:
     )
     variation: float = 1.0        # scales motif-variant probabilities;
                                   # 0 = deterministic legacy streams
+    arrival_stagger: float = 0.0  # mean inter-arrival gap (exponential) for
+                                  # staggered multi-tenant serving; 0 = all
+                                  # tenants present at t=0 (legacy, and the
+                                  # draw-for-draw reproduction guarantee:
+                                  # no extra rng draws happen when off)
 
 
 def make_episodes(cfg: WorkloadConfig) -> List[Episode]:
     rng = np.random.default_rng(cfg.seed)
     kinds, probs = zip(*cfg.mix)
     episodes = []
+    t_arrive = 0.0
     for eid in range(cfg.n_episodes):
         kind = str(rng.choice(kinds, p=np.array(probs) / sum(probs)))
         # the cross-cutting audit motif rides on variation so that
@@ -177,7 +186,12 @@ def make_episodes(cfg: WorkloadConfig) -> List[Episode]:
                 and rng.random() < 0.25 * cfg.variation:
             kind = "audit"
         steps = KINDS[kind](eid, rng, cfg.variation)
-        episodes.append(Episode(eid, kind, steps))
+        # Poisson-ish open arrivals: cumulative exponential gaps, drawn
+        # AFTER the episode's own draws so arrival_stagger=0 keeps every
+        # legacy stream draw-for-draw (no draw is taken when off)
+        if cfg.arrival_stagger > 0 and eid > 0:
+            t_arrive += float(rng.exponential(cfg.arrival_stagger))
+        episodes.append(Episode(eid, kind, steps, arrival=t_arrive))
     return episodes
 
 

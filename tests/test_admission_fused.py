@@ -150,6 +150,91 @@ def test_fused_empty_beam():
 
 
 # ======================================================================
+# Shared cross-episode beams (candidates pooled from several tenants,
+# per-tenant fairness weights)
+# ======================================================================
+
+def _two_tenant_beam(rng, k):
+    """Interleaved candidates from two tenants (hids globally unique, as the
+    runtime's single builder guarantees) plus per-candidate fairness
+    weights: tenant 1 carries in-flight speculative share, so its weight
+    is < 1."""
+    hyps = _random_beam(rng, k)
+    w_by_tenant = {0: 1.0, 1: float(rng.uniform(0.4, 0.9))}
+    weights = np.array([w_by_tenant[hid % 2] for hid in range(k)])
+    return hyps, weights
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("k", [4, 7, 10])
+def test_shared_beam_fused_matches_reference(seed, k):
+    """Fused vs reference when candidates span episodes: the weighted EU
+    objective must produce identical admitted sets and EU-at-admit through
+    every admission path."""
+    rng = np.random.default_rng(500 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps, weights = _two_tenant_beam(rng, k)
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    ref = admission.greedy_admit(hyps, sc, slack, budget, auth, weights=weights)
+    fus = admission.fused_admit(hyps, sc, slack, budget, auth, weights=weights)
+    _assert_equivalent(ref, fus, hyps)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_shared_beam_numpy_path_matches_kernel(seed):
+    rng = np.random.default_rng(600 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps, weights = _two_tenant_beam(rng, 6)
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    via_np = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                   weights=weights,
+                                   small_beam_threshold=len(hyps))
+    via_krn = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                    weights=weights, small_beam_threshold=0)
+    _assert_equivalent(via_np, via_krn, hyps)
+
+
+def test_uniform_weights_change_nothing():
+    """EU is linear in q: a uniform weight vector is a common positive
+    factor and must admit exactly the unweighted set (single-tenant pools
+    skip weighting entirely on this guarantee)."""
+    rng = np.random.default_rng(7)
+    sc = scoring.Scorer(Machine())
+    hyps = _random_beam(rng, 8)
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    plain = admission.fused_admit(hyps, sc, slack, budget, auth)
+    halves = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                   weights=np.full(len(hyps), 0.5))
+    assert sorted(h.hid for h in plain.admitted) == sorted(
+        h.hid for h in halves.admitted)
+    for hid, val in plain.eu.items():
+        np.testing.assert_allclose(halves.eu[hid], 0.5 * val, rtol=1e-4)
+
+
+def test_fairness_weight_flips_starved_tenant_in():
+    """Two equal candidates, room for one: unweighted, the higher-q tenant
+    wins; with its share discounted below the other's, admission flips —
+    the mechanism that stops one tenant monopolizing the shared beam."""
+    sc = scoring.Scorer(Machine())
+    rich = _mk_hyp(0, ["grep", "read"], q=0.8)     # tenant with spec share
+    poor = _mk_hyp(1, ["grep", "read"], q=0.7)     # starved tenant
+    slack = np.array([1.2, 10.0, 60.0, 1.0])       # one grep-prefix fits
+    budget = slack.copy()
+    plain = admission.fused_admit([rich, poor], sc, slack, budget, np.zeros(4))
+    assert [h.hid for h in plain.admitted] == [0]
+    weighted = admission.fused_admit(
+        [rich, poor], sc, slack, budget, np.zeros(4),
+        weights=np.array([0.5, 1.0]))
+    assert [h.hid for h in weighted.admitted] == [1]
+
+
+# ======================================================================
 # Wide-beam truncation regression (k_max silently dropped hypotheses)
 # ======================================================================
 

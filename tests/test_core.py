@@ -153,6 +153,18 @@ def test_eu_decreases_with_interference():
     assert eu_idle[0] > eu_busy[0]
 
 
+def test_tenant_fairness_weights():
+    """w_e = 1/(1 + alpha*share): no share -> no discount, heavier in-flight
+    speculative share -> stronger discount, alpha=0 disables, and weights
+    stay positive (the eu>0 admission threshold must never flip sign)."""
+    w = scoring.tenant_fairness_weights({0: 0.0, 1: 2.0}, alpha=1.0)
+    assert w[0] == pytest.approx(1.0)
+    assert w[1] == pytest.approx(1.0 / 3.0)
+    assert scoring.tenant_fairness_weights({0: 5.0}, alpha=0.0)[0] == 1.0
+    assert all(v > 0 for v in
+               scoring.tenant_fairness_weights({0: 1e6}, alpha=3.0).values())
+
+
 def test_eu_scales_with_q():
     sc = scoring.Scorer(Machine())
     h1 = _mk_hyp(0, ["grep", "read"], q=0.9)
@@ -298,6 +310,32 @@ def test_missing_args_detected():
     pe = _engine()
     edits = [pt for pt in pe.patterns if pt.tool == "edit"]
     assert edits and all("change" in pt.missing_args for pt in edits)
+
+
+def test_mine_bindings_denominator_over_all_occurrences():
+    """Regression: each offset's hit fraction was computed against an
+    offset-specific denominator (only occurrences with len(hist) >= off), so
+    a rarely-reachable offset could win with frac 1.0 off a tiny sample.
+    Here offset -1 reproduces the arg in 2/3 of ALL occurrences while
+    offset -2 exists in only one occurrence (where it matches): the biased
+    miner scored -2 at 1/1 = 1.0 and picked it; the fixed miner scores it
+    1/3 and keeps the reliable -1 binding."""
+    from repro.core.patterns import mine_bindings
+    u1, u2, u3 = "http://a", "http://b", "http://c"
+    t1 = [Event("tool", "search", {"query": "q1"}, {"top": u1}),
+          Event("tool", "visit", {"url": u1}, {"path": "p1"})]
+    t2 = [Event("tool", "search", {"query": "q2"}, {"top": u2}),
+          Event("tool", "visit", {"url": u2}, {"path": "p2"})]
+    t3 = [Event("tool", "read", {"path": u3}, u3),        # offset -2 decoy
+          Event("tool", "search", {"query": "q3"}, {"top": "http://other"}),
+          Event("tool", "visit", {"url": u3}, {"path": "p3"})]
+    ctx = (signature(t1[0]),)
+    bindings, missing = mine_bindings([t1, t2, t3], ctx, "visit",
+                                      min_frac=0.6)
+    by = {b.arg_name: b for b in bindings}
+    assert "url" in by
+    assert by["url"].source_offset == -1
+    assert by["url"].source_field == "top"
 
 
 def test_hypothesis_bounded():

@@ -88,6 +88,39 @@ def test_simulator_preemption_preserves_progress():
     assert abs(total_executed - 5.0) < 1e-6  # no work lost or duplicated
 
 
+def test_simulator_run_reports_truncation():
+    """Hitting max_time/max_steps with work outstanding must be reported
+    (sim.truncated + RuntimeWarning), not silently swallowed — downstream
+    serving-bench makespans would otherwise present a truncated clock as a
+    completed run."""
+    import pytest
+    from repro.core.interference import Machine
+    from repro.core.simulator import Simulator
+
+    machine = Machine()
+
+    def tick(sim):                  # endless work: one new job per tick
+        if not sim.running:
+            sim.start(sim.new_job("w", np.array([1.0, 1, 1, 0]), 1.0,
+                                  speculative=False))
+
+    sim = Simulator(machine, tick)
+    with pytest.warns(RuntimeWarning, match="max_time"):
+        completed = sim.run(max_time=5.0)
+    assert not completed and sim.truncated == "max_time"
+
+    sim2 = Simulator(machine, tick)
+    with pytest.warns(RuntimeWarning, match="max_steps"):
+        completed = sim2.run(max_steps=3)
+    assert not completed and sim2.truncated == "max_steps"
+
+    # a drained run reports complete, truncated stays None
+    sim3 = Simulator(machine, lambda s: None)
+    sim3.start(sim3.new_job("j", np.array([1.0, 1, 1, 0]), 2.0,
+                            speculative=False))
+    assert sim3.run() and sim3.truncated is None
+
+
 def test_long_context_hybrid_decode_smoke():
     """zamba2 (hybrid) decode with a longer cache — the long_500k code path
     at reduced scale: SSM state is O(1), shared-attn KV grows with cache."""
