@@ -1,0 +1,128 @@
+"""Result-store microbenchmarks + the saturated-regime end-to-end cell.
+
+Micro: publish / peek / validate (cached and uncached) / footprint
+invalidation throughput on a store pre-filled with workload-shaped entries —
+the store sits on the Phase-1 hot path and inside the per-tick memo-mask
+computation, so its per-op cost must stay in single-digit microseconds.
+
+End-to-end: concurrency 8 on the tool-bound serving box (see
+bench_serving.SERVE_BOX) with the shared-corpus workload — serial vs
+bpaste with the store off vs on.  This is the cell PR 3 could not win:
+at full utilization execution speculation has no slack to convert, but
+cache-served commits still delete authoritative work.  The thor-box row
+shows the same cell on the accelerator-bound edge box, where the
+model-step queue is the floor and no tool-level mechanism can move it.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.bench_serving import SERVE_BOX, THOR_BOX
+from repro.core.memo import ResultStore, memo_key
+from repro.core.patterns import PatternEngine
+from repro.core.runtime import run_mode
+from repro.core.sandbox import AgentState
+from repro.core.events import SafetyLevel
+from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episodes
+
+
+def _time(fn, n):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _fill(store: ResultStore, n: int) -> None:
+    for i in range(n):
+        store.publish(
+            "read", {"path": f"src/f{i}.py"}, {"path": f"src/f{i}.py",
+                                               "content": f"c{i}"},
+            reads={f"F:src/f{i}.py": f"c{i}"},
+            writes={},
+            level=SafetyLevel.READ_ONLY, solo_work=0.8, eid=i % 4)
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    rows: List[Dict] = []
+    n = 200 if smoke else 2000
+
+    store = ResultStore()
+    _fill(store, 256)
+    st = AgentState(fs={f"src/f{i}.py": f"c{i}" for i in range(256)})
+
+    rows.append({
+        "name": "memo/publish", "us_per_call": _time(
+            lambda: store.publish("grep", {"pattern": "p"}, {"path": "x"},
+                                  reads={}, writes={},
+                                  level=SafetyLevel.READ_ONLY,
+                                  solo_work=1.5, eid=0), n),
+        "derived": f"entries={len(store)}"})
+    entry = store.peek("read", {"path": "src/f7.py"})
+    rows.append({
+        "name": "memo/peek", "us_per_call": _time(
+            lambda: store.peek("read", {"path": "src/f7.py"}), n),
+        "derived": "key=(tool, canonical args)"})
+    rows.append({
+        "name": "memo/validate_cached", "us_per_call": _time(
+            lambda: store.validate(entry, st, eid=0), n),
+        "derived": "versioned per-tenant cache hit"})
+    rows.append({
+        "name": "memo/validate_uncached", "us_per_call": _time(
+            lambda: store.validate(entry, st), n),
+        "derived": "value check over read footprint"})
+    rows.append({
+        "name": "memo/note_writes_miss", "us_per_call": _time(
+            lambda: store.note_writes({"F:untracked": "v"}), n),
+        "derived": "no read-index intersection"})
+
+    def churn():
+        store.publish("read", {"path": "src/f3.py"},
+                      {"path": "src/f3.py", "content": "c3"},
+                      reads={"F:src/f3.py": "c3"}, writes={},
+                      level=SafetyLevel.READ_ONLY, solo_work=0.8, eid=0)
+        store.note_writes({"F:src/f3.py": "DIFFERENT"})
+    rows.append({
+        "name": "memo/invalidate_cycle", "us_per_call": _time(churn, n),
+        "derived": "publish + footprint-intersection kill"})
+
+    # ---- end-to-end: the saturated regime ------------------------------
+    n_train, n_test = (20, 8) if smoke else (60, 16)
+    train = make_episodes(WorkloadConfig(seed=1, n_episodes=n_train))
+    engine = PatternEngine(context_len=2, min_support=3).fit(
+        episodes_to_traces(train))
+    test = make_episodes(WorkloadConfig(seed=42, n_episodes=n_test,
+                                        arrival_stagger=4.0,
+                                        shared_frac=0.5, shared_pool=2))
+    cells = {}
+    for label, mode, memo, box in [
+        ("serial", "serial", False, SERVE_BOX),
+        ("bpaste", "bpaste", False, SERVE_BOX),
+        ("bpaste_memo", "bpaste", True, SERVE_BOX),
+        ("thor_bpaste_memo", "bpaste", True, THOR_BOX),
+    ]:
+        m = run_mode(test, engine, mode, box, seed=7,
+                     max_concurrent_episodes=8, memo=memo)
+        s = m.summary()
+        cells[label] = s
+        rows.append({
+            "name": f"memo/c8_{label}", "us_per_call": 0.0,
+            "derived": (f"makespan={s['makespan']:.1f} "
+                        f"p95_sojourn={s['p95_sojourn']:.1f} "
+                        f"serves={s['memo_serves']:.0f} "
+                        f"hits={s['memo_hits']:.0f} "
+                        f"dedups={s['memo_dedups']:.0f} "
+                        f"invalidations={s['memo_invalidations']:.0f} "
+                        f"saved={s['memo_saved_seconds']:.1f}s "
+                        f"slowdown={s['mean_auth_slowdown']:.3f}")})
+    sr, bm = cells["serial"], cells["bpaste_memo"]
+    rows.append({
+        "name": "memo/c8_memo_vs_serial", "us_per_call": 0.0,
+        "derived": (f"makespan {sr['makespan']:.1f}->{bm['makespan']:.1f} "
+                    f"({sr['makespan'] / max(bm['makespan'], 1e-9):.3f}x) "
+                    f"p95_sojourn {sr['p95_sojourn']:.1f}->"
+                    f"{bm['p95_sojourn']:.1f} "
+                    f"({sr['p95_sojourn'] / max(bm['p95_sojourn'], 1e-9):.3f}x)")})
+    return rows

@@ -1,27 +1,55 @@
-"""Concurrent-episode serving sweep: the shared cross-episode beam under
-multi-tenant load.
+"""Concurrent-episode serving sweep: the shared cross-episode beam and the
+cross-episode result store under multi-tenant load.
 
-Grid: ``max_concurrent_episodes`` x mode (serial / paste / bpaste) on the
-default motif-variant workload with staggered tenant arrivals.  Per cell:
-makespan, p95 service latency, p95 sojourn (ARRIVAL -> completion —
-queueing delay included, the metric concurrency actually buys down: a
-tenant that waited 400s for a slot and ran 40s did not experience 40s of
-latency), mean authoritative slowdown, QoS violations, and the worst
-single tenant's mean slowdown (the pooled mean can hide one starved
-tenant — fairness is judged on the worst).
+Grid: ``max_concurrent_episodes`` x mode (serial / paste / bpaste /
+bpaste+memo) on the shared-corpus serving workload (staggered tenant
+arrivals, ``shared_frac`` of tenants working subjects from a small shared
+pool — the corpus-overlap regime cross-tenant result caching targets).
+Per cell: makespan, p95 service latency, p95 sojourn (ARRIVAL ->
+completion — queueing delay included, the metric concurrency actually buys
+down), mean authoritative slowdown, QoS violations, result-store serves,
+and the worst single tenant's mean slowdown.
 
-Headline row: bpaste at concurrency 4 vs serial at the same concurrency —
-the shared-beam admission must buy makespan without letting speculation tax
-authoritative work (mean_auth_slowdown <= 1.05 on the default workload).
+Machine: PR 3 ran this sweep on the Thor edge box (accel=1), where c >= 4
+is ACCELERATOR-bound — eight concurrent model steps queue on one slot, so
+every scheduler converges on the model-step floor and no tool-level
+mechanism (speculative execution OR result serving) can move makespan.
+That regime is measured honestly in the ``thor_c8`` rows below; the grid
+itself runs on a serving box with 4 accelerator slots, where c=8 is
+genuinely work-saturated but TOOL-bound — the regime the result store
+exists for: execution speculation has no slack left, while cache-served
+commits still delete authoritative work.
+
+Headline rows: bpaste+memo at c=8 vs serial and vs plain bpaste — the
+memo row must buy makespan/sojourn at saturation without taxing
+authoritative work (mean_auth_slowdown <= 1.05, zero QoS violations).
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.core.events import ResourceVector
 from repro.core.interference import Machine
 from repro.core.patterns import PatternEngine
 from repro.core.runtime import run_mode
 from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episodes
+
+# 12-core / 4-accelerator serving box: c=8 saturates on tool work, not on
+# the model-step queue (see module docstring)
+SERVE_BOX = Machine(ResourceVector(cpu=12, mem_bw=100, io=500, accel=4))
+THOR_BOX = Machine()                      # PR 3's edge box (accel=1)
+
+# mode label -> (runtime mode, memo enabled).  NOTE: the runtime DEFAULT is
+# memo=True (the store is part of the shipped system, and every other bench
+# measures bpaste with it on); this grid's plain "paste"/"bpaste" rows
+# disable it explicitly so the "+memo" column isolates the store's
+# contribution — same scheduler, store off vs on.
+MODES = {
+    "serial": ("serial", False),
+    "paste": ("paste", False),
+    "bpaste": ("bpaste", False),
+    "bpaste+memo": ("bpaste", True),
+}
 
 
 def _fit_engine(n_train: int) -> PatternEngine:
@@ -30,43 +58,79 @@ def _fit_engine(n_train: int) -> PatternEngine:
         episodes_to_traces(train))
 
 
+def _cell(test, engine, label: str, conc: int, machine) -> Dict:
+    mode, memo = MODES[label]
+    m = run_mode(test, engine, mode, machine, seed=7,
+                 max_concurrent_episodes=conc, memo=memo)
+    s = m.summary()
+    return s
+
+
+def _row(name: str, s: Dict) -> Dict:
+    trunc = " TRUNCATED" if s["truncated"] else ""
+    return {
+        "name": name,
+        "us_per_call": 0.0,
+        "derived": (f"makespan={s['makespan']:.1f} "
+                    f"p95_latency={s['p95_latency']:.1f} "
+                    f"p95_sojourn={s['p95_sojourn']:.1f} "
+                    f"mean_auth_slowdown={s['mean_auth_slowdown']:.3f} "
+                    f"qos_violations={s['qos_violations']:.0f} "
+                    f"memo_serves={s['memo_serves']:.0f} "
+                    f"memo_saved={s['memo_saved_seconds']:.1f} "
+                    f"worst_tenant_slowdown={s['worst_tenant_slowdown']:.3f}"
+                    f"{trunc}"),
+    }
+
+
+def _compare_row(name: str, base: Dict, new: Dict) -> Dict:
+    return {
+        "name": name,
+        "us_per_call": 0.0,
+        "derived": (
+            f"makespan {base['makespan']:.1f}->{new['makespan']:.1f} "
+            f"({base['makespan'] / max(new['makespan'], 1e-9):.3f}x) "
+            f"p95_sojourn {base['p95_sojourn']:.1f}->"
+            f"{new['p95_sojourn']:.1f} "
+            f"({base['p95_sojourn'] / max(new['p95_sojourn'], 1e-9):.3f}x) "
+            f"mean_auth_slowdown={new['mean_auth_slowdown']:.3f} "
+            f"(target<=1.05)"),
+    }
+
+
 def run(smoke: bool = False) -> List[Dict]:
-    n_train, n_test = (20, 4) if smoke else (60, 12)
-    concurrencies = [1, 4] if smoke else [1, 2, 4, 8]
-    modes = ["serial", "bpaste"] if smoke else ["serial", "paste", "bpaste"]
+    n_train, n_test = (20, 8) if smoke else (60, 16)
+    concurrencies = [1, 8] if smoke else [1, 2, 4, 8]
+    labels = (["serial", "bpaste", "bpaste+memo"] if smoke
+              else ["serial", "paste", "bpaste", "bpaste+memo"])
     engine = _fit_engine(n_train)
     test = make_episodes(WorkloadConfig(seed=42, n_episodes=n_test,
-                                        arrival_stagger=4.0))
+                                        arrival_stagger=4.0,
+                                        shared_frac=0.5, shared_pool=2))
     rows: List[Dict] = []
     cells: Dict = {}
     for conc in concurrencies:
-        for mode in modes:
-            m = run_mode(test, engine, mode, Machine(), seed=7,
-                         max_concurrent_episodes=conc)
-            s = m.summary()
-            cells[(mode, conc)] = s
-            worst = s["worst_tenant_slowdown"]
-            trunc = " TRUNCATED" if s["truncated"] else ""
-            rows.append({
-                "name": f"serving/{mode}_c{conc}",
-                "us_per_call": 0.0,
-                "derived": (f"makespan={s['makespan']:.1f} "
-                            f"p95_latency={s['p95_latency']:.1f} "
-                            f"p95_sojourn={s['p95_sojourn']:.1f} "
-                            f"mean_auth_slowdown={s['mean_auth_slowdown']:.3f} "
-                            f"qos_violations={s['qos_violations']:.0f} "
-                            f"worst_tenant_slowdown={worst:.3f}{trunc}"),
-            })
-    if ("bpaste", 4) in cells and ("serial", 4) in cells:
-        bp, sr = cells[("bpaste", 4)], cells[("serial", 4)]
-        rows.append({
-            "name": "serving/bpaste_c4_vs_serial_c4",
-            "us_per_call": 0.0,
-            "derived": (
-                f"makespan {sr['makespan']:.1f}->{bp['makespan']:.1f} "
-                f"({sr['makespan'] / max(bp['makespan'], 1e-9):.3f}x) "
-                f"mean_auth_slowdown={bp['mean_auth_slowdown']:.3f} "
-                f"(target<=1.05) p95_sojourn {sr['p95_sojourn']:.1f}->"
-                f"{bp['p95_sojourn']:.1f}"),
-        })
+        for label in labels:
+            s = _cell(test, engine, label, conc, SERVE_BOX)
+            cells[(label, conc)] = s
+            rows.append(_row(f"serving/{label}_c{conc}", s))
+    # the PR 3 edge box at c=8: accelerator-bound — modes converge and the
+    # store cannot help (documented honestly; the grid above is the regime
+    # the store targets)
+    if not smoke:
+        for label in ("serial", "bpaste", "bpaste+memo"):
+            s = _cell(test, engine, label, 8, THOR_BOX)
+            rows.append(_row(f"serving/thor_c8_{label}", s))
+    if ("bpaste+memo", 8) in cells and ("serial", 8) in cells:
+        rows.append(_compare_row("serving/memo_c8_vs_serial_c8",
+                                 cells[("serial", 8)],
+                                 cells[("bpaste+memo", 8)]))
+    if ("bpaste+memo", 8) in cells and ("bpaste", 8) in cells:
+        rows.append(_compare_row("serving/memo_c8_vs_bpaste_c8",
+                                 cells[("bpaste", 8)],
+                                 cells[("bpaste+memo", 8)]))
+    if ("bpaste+memo", 4) in cells and ("serial", 4) in cells:
+        rows.append(_compare_row("serving/memo_c4_vs_serial_c4",
+                                 cells[("serial", 4)],
+                                 cells[("bpaste+memo", 4)]))
     return rows

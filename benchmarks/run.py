@@ -4,10 +4,13 @@ Prints ``name,us_per_call,derived`` CSV.
 ``--smoke`` runs a minutes-scale sanity pass (scheduler + admission + a
 reduced eval plan) for the tier-1 loop; the full suite is the default.
 ``--only SECTION`` filters sections by substring.
+``--json PATH`` additionally writes every row (plus its section) as a JSON
+list — CI artifacts this so bench regressions are diffable across runs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -17,12 +20,14 @@ def main() -> None:
                     help="fast sanity pass: scheduler, admission, reduced eval plan")
     ap.add_argument("--only", default=None,
                     help="run only sections whose name contains this substring")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all rows as a JSON list to PATH")
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation, bench_admission, bench_beam,
                             bench_engine, bench_eval_plan, bench_kernels,
-                            bench_scheduler, bench_serving, bench_table1,
-                            roofline)
+                            bench_memo, bench_scheduler, bench_serving,
+                            bench_table1, roofline)
 
     if args.smoke:
         sections = [
@@ -33,6 +38,8 @@ def main() -> None:
              lambda: bench_beam.run(smoke=True)),
             ("serving (concurrent episodes, shared beam)",
              lambda: bench_serving.run(smoke=True)),
+            ("memo (result store, cache-served commits)",
+             lambda: bench_memo.run(smoke=True)),
             ("eval_plan (paper SS9 metrics, smoke)",
              lambda: bench_eval_plan.run(smoke=True)),
         ]
@@ -45,20 +52,30 @@ def main() -> None:
             ("admission (fused vs reference)", bench_admission.run),
             ("beam (tree assembly occupancy/reuse)", bench_beam.run),
             ("serving (concurrent episodes, shared beam)", bench_serving.run),
+            ("memo (result store, cache-served commits)", bench_memo.run),
             ("engine (B-PASTE x serving engine integration)", bench_engine.run),
             ("kernels", bench_kernels.run),
             ("roofline (dry-run derived)", roofline.run),
         ]
     if args.only:
         sections = [(t, f) for t, f in sections if args.only in t]
+    all_rows = []
     print("name,us_per_call,derived")
     for title, fn in sections:
         print(f"# --- {title} ---", file=sys.stderr)
         try:
             for row in fn():
                 print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+                all_rows.append({"section": title, **row})
         except Exception as e:  # keep the harness robust
             print(f"{title},0,\"ERROR: {type(e).__name__}: {e}\"")
+            all_rows.append({"section": title, "name": title,
+                             "us_per_call": 0.0,
+                             "derived": f"ERROR: {type(e).__name__}: {e}"})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(all_rows, f, indent=2)
+        print(f"# wrote {len(all_rows)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

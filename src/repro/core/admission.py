@@ -76,6 +76,8 @@ def greedy_admit(
     authoritative_rho: np.ndarray,
     idle_window: float = 10.0,
     weights: Optional[np.ndarray] = None,
+    memo_masks: Optional[np.ndarray] = None,
+    memo_rho: Optional[np.ndarray] = None,
 ) -> AdmissionResult:
     """Reference greedy: scoring dispatches (one per k_max chunk) + numpy
     re-pack PER admission iteration.  Semantics oracle for ``fused_admit``;
@@ -85,12 +87,18 @@ def greedy_admit(
     cross-episode beams weight each tenant's candidates by its current
     speculative share).  EU is linear in q, so weighting EU post-score is
     exactly weighting q — the greedy order, the eu>0 admission threshold
-    (weights are positive), and the recorded EU-at-admit all see q·w."""
+    (weights are positive), and the recorded EU-at-admit all see q·w.
+
+    ``memo_masks`` (len(hyps), n_max) / ``memo_rho`` (len(hyps), R) carry
+    the result-store reuse term (see scoring.static_gain_terms): memoized
+    prefix nodes contribute EU at zero demand, so both the scoring AND the
+    capacity-fit check use the memo-excluded prefix ρ."""
     limit = np.minimum(slack, budget)
     admitted: List[BranchHypothesis] = []
     admitted_demand = np.zeros(RESOURCE_DIMS)
     eu_at_admit: dict = {}
     remaining = list(hyps)
+    idx_of = {id(h): i for i, h in enumerate(hyps)}
     w_by_hid = (
         {h.hid: float(weights[i]) for i, h in enumerate(hyps)}
         if weights is not None else None
@@ -98,8 +106,11 @@ def greedy_admit(
     while remaining:
         # score_all chunks beams wider than scorer.k_max — every remaining
         # hypothesis gets a real EU, not the padded-table truncation
+        rows = [idx_of[id(h)] for h in remaining]
         eu = scorer.score_all(
-            remaining, authoritative_rho + admitted_demand, idle_window
+            remaining, authoritative_rho + admitted_demand, idle_window,
+            memo_masks=None if memo_masks is None else memo_masks[rows],
+            memo_rho=None if memo_rho is None else memo_rho[rows],
         )
         if w_by_hid is not None:
             eu = eu * np.array([w_by_hid[h.hid] for h in remaining])
@@ -109,7 +120,10 @@ def greedy_admit(
             if eu[oi] <= 0:
                 break
             cand = remaining[oi]
-            rho = _prefix_rho(cand)
+            if memo_rho is not None:
+                rho = memo_rho[idx_of[id(cand)]]
+            else:
+                rho = _prefix_rho(cand)
             if np.all(admitted_demand + rho <= _fit_limit(limit)):
                 picked = (oi, cand, float(eu[oi]), rho)
                 break
@@ -134,7 +148,7 @@ def bucket_k(n: int, k_max: int) -> int:
 @functools.partial(jax.jit, static_argnames=("n_nodes",))
 def admit_beam(
     node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid,
-    w, auth_rho, cap, limit, lam, mu, idle_window, n_nodes: int,
+    w, memo_mask, auth_rho, cap, limit, lam, mu, idle_window, n_nodes: int,
 ):
     """Entire greedy admission pass as ONE jitted kernel.
 
@@ -151,10 +165,16 @@ def admit_beam(
     ``w`` (K,) are positive per-hypothesis fairness weights; EU is linear in
     q so multiplying EU by w is identical to scoring with q·w.
 
+    ``memo_mask`` (K, N) marks result-store-memoized prefix nodes (the reuse
+    term): they are excluded from the interference-exposed latency here, and
+    the caller passes ``rho`` already excluding them — memoized nodes
+    contribute EU at zero demand.
+
     Returns (admitted_mask (K,), eu_at_admit (K,), admitted_demand (R,)).
     """
-    l_solo, delta_o, delta_u = static_gain_terms(
-        node_lat, node_prob, node_mask, prefix_mask, adj, idle_window, n_nodes
+    l_solo, l_exec, delta_o, delta_u = static_gain_terms(
+        node_lat, node_prob, node_mask, prefix_mask, adj, idle_window,
+        n_nodes, memo_mask=memo_mask,
     )
     fit_lim = _fit_limit(limit)
     K = q.shape[0]
@@ -165,7 +185,7 @@ def admit_beam(
     def body(state):
         remaining, admitted, demand, eu_adm, _ = state
         eu, _ = eu_given_admitted(
-            l_solo, delta_o, delta_u, q, rho, k_valid,
+            l_exec, delta_o, delta_u, q, rho, k_valid,
             auth_rho + demand, cap, lam, mu, idle_window,
         )
         eu = eu * w
@@ -192,27 +212,26 @@ def admit_beam(
 
 
 def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
-                 idle_window, w=None) -> Tuple[np.ndarray, np.ndarray]:
+                 idle_window, w=None, memo_mask=None,
+                 rho=None) -> Tuple[np.ndarray, np.ndarray]:
     """The ``admit_beam`` algorithm on the same PackedBeam tables in pure
     numpy — the host-side fast path for tiny beams, where a single XLA
     dispatch (~1 ms on CPU) dwarfs the actual arithmetic.  The Eq. 3
-    estimator is the shared ``eu_given_admitted`` (with ``xp=np``); only the
-    static ΔO/ΔU terms are recomputed here (the jitted ``_critical_path``
-    would itself be a dispatch).  Returns (admitted_mask (K,),
-    eu_at_admit (K,))."""
+    estimator is the shared ``eu_given_admitted``/``static_gain_terms``
+    (with ``xp=np``), so there is exactly one implementation of every term.
+    ``memo_mask``/``rho`` carry the result-store reuse term (``rho``
+    overrides the packed prefix demand with the memo-excluded one).
+    Returns (admitted_mask (K,), eu_at_admit (K,))."""
     lat, prob = packed.node_lat, packed.node_prob
     mask, pmask, adj = packed.node_mask, packed.prefix_mask, packed.adj
-    q, rho, k_valid = packed.q, packed.rho, packed.k_valid
+    q, k_valid = packed.q, packed.k_valid
+    if rho is None:
+        rho = packed.rho
     K, N = lat.shape
-    l_solo = (lat * pmask).sum(axis=1)
-    delta_o = np.minimum(l_solo, idle_window)
-    post_mask = mask * (1.0 - pmask)
-    exp_lat = lat * prob * post_mask
-    dist = exp_lat.copy()
-    for _ in range(N):                          # masked longest-path relaxation
-        via = np.max(adj * (dist[:, :, None] + exp_lat[:, None, :]), axis=1)
-        dist = np.maximum(dist, via * (post_mask > 0))
-    delta_u = dist.max(axis=1)
+    l_solo, l_exec, delta_o, delta_u = static_gain_terms(
+        lat, prob, mask, pmask, adj, idle_window, N,
+        memo_mask=memo_mask, xp=np,
+    )
 
     fit_lim = _fit_limit(limit)
     if w is None:
@@ -223,7 +242,7 @@ def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
     eu_adm = np.zeros(K)
     while True:
         eu, _ = eu_given_admitted(
-            l_solo, delta_o, delta_u, q, rho, k_valid,
+            l_exec, delta_o, delta_u, q, rho, k_valid,
             auth_rho + demand, cap, lam, mu, idle_window, xp=np,
         )
         eu = eu * w
@@ -248,6 +267,8 @@ def fused_admit(
     packed: Optional[PackedBeam] = None,
     small_beam_threshold: int = 2,
     weights: Optional[np.ndarray] = None,
+    memo_masks: Optional[np.ndarray] = None,
+    memo_rho: Optional[np.ndarray] = None,
 ) -> AdmissionResult:
     """Greedy admission via the fused ``admit_beam`` kernel: one XLA dispatch
     per admission pass (vs. one scoring dispatch per *iteration* in
@@ -258,7 +279,10 @@ def fused_admit(
     packing); it must have been packed from exactly these ``hyps`` at a
     bucketed K ≥ len(hyps).  ``weights`` (len(hyps),) are the per-hypothesis
     fairness multipliers (see ``greedy_admit``) — NOT part of the packed
-    tables, so the PackedBeam cache stays valid as tenant shares move."""
+    tables, so the PackedBeam cache stays valid as tenant shares move.
+    ``memo_masks`` (len(hyps), n_max) / ``memo_rho`` (len(hyps), R) carry
+    the result-store reuse term and ride alongside the pack for the same
+    reason (store contents change every tick; the pack does not)."""
     if not len(hyps):
         return AdmissionResult([], {}, [])
     limit = np.minimum(slack, budget)
@@ -269,17 +293,25 @@ def fused_admit(
     w_pad = np.ones(K)
     if weights is not None:
         w_pad[: len(hyps)] = np.asarray(weights, float)
+    mm_pad = np.zeros((K, packed.node_lat.shape[1]))
+    rho = packed.rho
+    if memo_masks is not None:
+        mm_pad[: len(hyps), :] = np.asarray(memo_masks, float)
+    if memo_rho is not None:
+        rho = rho.copy()
+        rho[: len(hyps), :] = np.asarray(memo_rho, float)
     if len(hyps) <= small_beam_threshold:
         admitted_mask, eu_adm = _admit_numpy(
             packed, np.asarray(authoritative_rho, float), cap,
             np.asarray(limit, float), scorer.lam, scorer.mu, idle_window,
-            w=w_pad,
+            w=w_pad, memo_mask=mm_pad, rho=rho,
         )
     else:
         admitted_mask, eu_adm, _ = admit_beam(
             packed.node_lat, packed.node_prob, packed.node_mask,
-            packed.prefix_mask, packed.adj, packed.q, packed.rho, packed.k_valid,
-            jnp.asarray(w_pad), jnp.asarray(authoritative_rho),
+            packed.prefix_mask, packed.adj, packed.q, rho, packed.k_valid,
+            jnp.asarray(w_pad), jnp.asarray(mm_pad),
+            jnp.asarray(authoritative_rho),
             jnp.asarray(cap), jnp.asarray(limit), scorer.lam, scorer.mu,
             idle_window, n_nodes=scorer.n_max,
         )

@@ -5,6 +5,16 @@ Sandbox (CoW views), authoritative runs get the live AgentState.  Results
 are structured dicts so late-binding transforms (patterns.py) have fields to
 key on — mirroring PASTE's observation that many arguments are derivable
 from prior outputs.
+
+The ``StateFacade`` additionally records a **per-call footprint** — the
+namespaced keys each tool invocation read (with the observed value, or an
+ABSENT marker when the read fell through to the tool's internal default) and
+the overlay it wrote.  The cross-episode result store (memo.py) keys entry
+validity on exactly this footprint; the old whole-sandbox
+``CowView.base_reads`` set is lifetime-cumulative (over-broad for per-call
+entries) and live ``_DictView`` reads were not tracked at all.  A read of a
+key the same call already wrote is a self-read — replay reproduces it — and
+is excluded from the footprint.
 """
 from __future__ import annotations
 
@@ -13,7 +23,7 @@ from dataclasses import dataclass
 from typing import Any, Dict, Optional, Union
 
 from repro.core.events import DEFAULT_TOOLS, Event, SafetyLevel, ToolSpec
-from repro.core.sandbox import AgentState, CowView, Sandbox
+from repro.core.sandbox import ABSENT, AgentState, CowView, Sandbox, _TOMBSTONE
 
 
 def _h(s: str) -> str:
@@ -21,19 +31,34 @@ def _h(s: str) -> str:
 
 
 class StateFacade:
-    """Uniform M/F/E access over AgentState or Sandbox."""
+    """Uniform M/F/E access over AgentState or Sandbox, with per-call
+    read/write footprint tracking (memo.py consumes it)."""
 
     def __init__(self, st: Union[AgentState, Sandbox]):
         self._st = st
-        self.writes: set = set()            # namespaced keys written (live only)
+        self.writes: set = set()             # namespaced keys written (cumulative)
+        self.reads: Dict[str, Any] = {}      # per-call: ns key -> value | ABSENT
+        self.write_values: Dict[str, Any] = {}  # per-call: ns key -> value | _TOMBSTONE
         if isinstance(st, Sandbox):
-            self.M, self.F, self.E = st.M, st.F, st.E
+            inner = {"M": st.M, "F": st.F, "E": st.E}
             self.sandboxed = True
         else:
-            self.M = _DictView(st.memory, self.writes, "M")
-            self.F = _DictView(st.fs, self.writes, "F")
-            self.E = _DictView(st.env, self.writes, "E")
+            inner = {"M": _DictView(st.memory), "F": _DictView(st.fs),
+                     "E": _DictView(st.env)}
             self.sandboxed = False
+        self.M = _TrackedView(inner["M"], "M", self)
+        self.F = _TrackedView(inner["F"], "F", self)
+        self.E = _TrackedView(inner["E"], "E", self)
+
+    def begin_call(self):
+        """Reset the per-call footprint (``writes`` stays cumulative — the
+        runtime unions it across a replayed path for conflict pruning)."""
+        self.reads = {}
+        self.write_values = {}
+
+    def footprint(self):
+        """(reads, write overlay) of the current call."""
+        return dict(self.reads), dict(self.write_values)
 
     def bump_if_live(self):
         if not self.sandboxed:
@@ -41,29 +66,70 @@ class StateFacade:
 
 
 class _DictView:
-    def __init__(self, d: Dict[str, Any], writes: set = None, ns: str = ""):
+    """Plain dict adapter giving live AgentState namespaces the CowView
+    read/write protocol (footprint recording lives in _TrackedView)."""
+
+    def __init__(self, d: Dict[str, Any]):
         self._d = d
-        self._writes = writes
-        self._ns = ns
 
     def get(self, k, default=None):
         return self._d.get(k, default)
 
     def set(self, k, v):
         self._d[k] = v
-        if self._writes is not None:
-            self._writes.add(f"{self._ns}:{k}")
 
     def delete(self, k):
         self._d.pop(k, None)
-        if self._writes is not None:
-            self._writes.add(f"{self._ns}:{k}")
 
     def __contains__(self, k):
         return k in self._d
 
     def keys(self):
         return set(self._d.keys())
+
+
+class _TrackedView:
+    """Footprint-recording wrapper over a CowView (sandbox) or _DictView
+    (live).  Writes pass straight through; reads record (key, observed
+    value) unless the same call already wrote the key (self-read)."""
+
+    def __init__(self, inner, ns: str, fac: StateFacade):
+        self._inner = inner
+        self._ns = ns
+        self._fac = fac
+
+    def get(self, k, default=None):
+        nk = f"{self._ns}:{k}"
+        wv = self._fac.write_values
+        if nk in wv:
+            v = wv[nk]
+            return default if v is _TOMBSTONE else v
+        present = k in self._inner
+        v = self._inner.get(k, default)
+        self._fac.reads[nk] = v if present else ABSENT
+        return v
+
+    def set(self, k, v):
+        nk = f"{self._ns}:{k}"
+        self._inner.set(k, v)
+        self._fac.writes.add(nk)
+        self._fac.write_values[nk] = v
+
+    def delete(self, k):
+        nk = f"{self._ns}:{k}"
+        self._inner.delete(k)
+        self._fac.writes.add(nk)
+        self._fac.write_values[nk] = _TOMBSTONE
+
+    def __contains__(self, k):
+        nk = f"{self._ns}:{k}"
+        wv = self._fac.write_values
+        if nk in wv:
+            return wv[nk] is not _TOMBSTONE
+        return k in self._inner
+
+    def keys(self):
+        return self._inner.keys()
 
 
 def execute_tool(tool: str, args: Dict[str, Any], state: StateFacade) -> Dict[str, Any]:
@@ -76,6 +142,9 @@ def execute_tool(tool: str, args: Dict[str, Any], state: StateFacade) -> Dict[st
         url = str(args.get("url", args.get("path", "")))
         content = f"content::{_h(url)}"
         state.F.set(url, content)          # read-through cache write (L1-safe)
+        # any live base mutation must advance the version or Sandbox.is_stale
+        # misses it (bump is a no-op for sandboxed runs)
+        state.bump_if_live()
         return {"path": url, "content": content}
     if tool == "grep":
         pat = str(args.get("pattern", ""))
@@ -111,6 +180,7 @@ def execute_tool(tool: str, args: Dict[str, Any], state: StateFacade) -> Dict[st
     if tool == "pip_download":
         pkg = str(args.get("pkg", ""))
         state.F.set(f"cache/{pkg}.whl", "wheel")
+        state.bump_if_live()
         return {"pkg": pkg, "cached": True}
     if tool in ("session_init", "env_warmup"):
         state.E.set(f"warm:{tool}", True)

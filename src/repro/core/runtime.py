@@ -50,10 +50,11 @@ from repro.core.hypothesis import (
     COLD_TOOLS, BranchHypothesis, HypothesisBuilder, Node, NodeKind,
 )
 from repro.core.interference import Machine
+from repro.core.memo import MemoEntry, ResultStore, memo_key
 from repro.core.patterns import PatternEngine
 from repro.core.safety import EligibilityPolicy, FULL_POLICY
 from repro.core.sandbox import AgentState, Sandbox
-from repro.core.scoring import PackedBeam, Scorer, pack_beam
+from repro.core.scoring import PackedBeam, Scorer, pack_beam, prefix_rho
 from repro.core.simulator import SimJob, Simulator
 from repro.core.workload import Episode
 
@@ -68,6 +69,10 @@ class NodeRun:
     run_tool: str = ""            # actual (possibly transformed) tool
     transformed: bool = False
     snapshot: Optional[Dict[str, Dict[str, Any]]] = None  # cumulative overlay
+    waiting: bool = False         # subscribed to an in-flight twin in the
+                                  # result store (launch deduped)
+    served: bool = False          # result came from the store at zero cost
+                                  # (no job, no burn — not "invested" work)
 
 
 @dataclass
@@ -136,6 +141,11 @@ class RuntimeConfig:
                                   # holding speculative capacity get their
                                   # candidates' EU discounted by
                                   # 1/(1+alpha*share); 0 disables
+    memo: bool = True             # runtime-global result store: validated
+                                  # speculative/authoritative results are
+                                  # SERVED to later identical invocations
+                                  # (any tenant) instead of re-executed;
+                                  # inert in mode="serial"
 
 
 @dataclass
@@ -166,6 +176,19 @@ class Metrics:
     tenant_sojourn: Dict[int, float] = field(default_factory=dict)
     tenant_slowdown_samples: Dict[int, List[float]] = field(default_factory=dict)
     tenant_qos_violations: Dict[int, int] = field(default_factory=dict)
+    # cross-episode result store (memo.py): authoritative actions served
+    # from the cache at zero execution cost, speculative launches served
+    # into sandboxes, duplicate in-flight launches deduped, entries killed
+    # by footprint-intersection invalidation, and the per-tenant latency the
+    # serves bought (a tenant at saturation gets hits from a sibling's warm
+    # speculation — this is the number that shows it)
+    memo_serves: int = 0
+    memo_hits: int = 0
+    memo_dedups: int = 0
+    memo_invalidations: int = 0
+    memo_entries: int = 0
+    memo_saved_seconds: float = 0.0
+    tenant_memo_saved: Dict[int, float] = field(default_factory=dict)
     # occupied beam slots (active hypotheses, launchable or mid-flight,
     # summed over all active episodes) at each shared admission pass —
     # beam fullness against the per-episode beam_k slot cap, NOT the
@@ -222,6 +245,12 @@ class Metrics:
                 max(float(np.mean(s)) for s in self.tenant_slowdown_samples.values())
                 if self.tenant_slowdown_samples else 1.0
             ),
+            "memo_serves": self.memo_serves,
+            "memo_hits": self.memo_hits,
+            "memo_dedups": self.memo_dedups,
+            "memo_invalidations": self.memo_invalidations,
+            "memo_saved_seconds": self.memo_saved_seconds,
+            "memo_serve_rate": self.memo_serves / max(self.auth_actions, 1),
         }
 
     def per_tenant(self) -> Dict[int, Dict[str, float]]:
@@ -239,6 +268,7 @@ class Metrics:
                     if self.tenant_slowdown_samples.get(eid) else 1.0
                 ),
                 "qos_violations": float(self.tenant_qos_violations.get(eid, 0)),
+                "memo_saved": self.tenant_memo_saved.get(eid, 0.0),
             }
             for eid in sorted(eids)
         }
@@ -276,6 +306,15 @@ class BPasteRuntime:
                              k_max=rcfg.beam_k, n_max=rcfg.max_nodes)
         self.metrics = Metrics()
         self.episodes = [EpisodeState(ep, AgentState()) for ep in episodes]
+        # runtime-GLOBAL result store: one cache spans every episode/tenant,
+        # so a tenant at saturation is served from a sibling's warm
+        # speculation (speculative value decoupled from speculative
+        # execution).  Inert in serial mode — serial is the no-system
+        # baseline, caching is part of the speculation machinery.
+        self.store = ResultStore()
+        self._memo_on = rcfg.memo and rcfg.mode != "serial"
+        self._rho_cache: Dict[int, np.ndarray] = {}   # hid -> static prefix_rho
+        self._cap = machine.cap_array()               # Machine is frozen
         self._wave_ptr = 0
         # shared-beam incremental packing: ONE PackedBeam cache for the
         # pooled cross-episode candidate beam (hids are globally unique —
@@ -299,6 +338,8 @@ class BPasteRuntime:
         # squashes), so wasted_frac stays <= 1 by construction
         for es in self.episodes:
             self._squash_all(es)
+        self.metrics.memo_invalidations = self.store.invalidations
+        self.metrics.memo_entries = len(self.store)
         return self.metrics
 
     def _launch_wave(self):
@@ -412,6 +453,7 @@ class BPasteRuntime:
             es.last_writes = set(fac.writes)
             if spec.level >= SafetyLevel.STAGED_WRITE:
                 es.state.bump()
+            self._publish_result(fac, tool, args, result, es.ep.eid)
             self._finish_action(es, result, job.started_at or 0.0)
 
         job = self.sim.new_job(
@@ -499,10 +541,21 @@ class BPasteRuntime:
             tool, args = es.pending_action
             m = self._match_action(es, tool, args)
             if m is None:
+                # beam miss: settle the miss consequences first (contradicted
+                # branches squash, mis-speculation accounting, chain-mode
+                # beam wipe) — they depend on the ACTION, not on how it gets
+                # satisfied — then try the cross-episode result store: a
+                # valid entry (any tenant's warm speculation or past
+                # authoritative run) serves the action at zero execution
+                # cost, else re-execute authoritatively
                 self._note_misses(es, tool, args)
-                self._start_auth_tool(es, tool, args)
+                entry = self._try_serve(es, tool, args)
                 es.pending_action = None
                 es.phase = "executing"
+                if entry is not None:
+                    self._finish_action(es, entry.result, self.sim.now)
+                else:
+                    self._start_auth_tool(es, tool, args)
                 continue
             hr, i, nr = m
             hr.used = True
@@ -517,6 +570,35 @@ class BPasteRuntime:
                 es.pending_action = None
                 self._finish_action(es, nr.result, self.sim.now)
             elif nr.status == "running" and nr.job is not None:
+                # the prefix state is valid either way (promotion would
+                # commit it at completion; replay is idempotent) — commit it
+                # FIRST so the serve validates against the post-prefix live
+                # state its read footprint may depend on.  The honest
+                # counterfactual here is PROMOTION, which would only have
+                # cost the job's REMAINING solo work — not the full latency
+                self._commit_path(es, hr, i, inclusive=False)
+                entry = self._try_serve(es, tool, args,
+                                        saved=max(nr.job.remaining, 0.0))
+                if entry is not None:
+                    # a sibling's entry landed while our copy was mid-flight:
+                    # serving is instant, so the run is redundant — preempt
+                    # it (partial burn settles as waste, same as a squash)
+                    # and consume the node coherently
+                    job = nr.job
+                    self.sim.preempt(job.jid)
+                    self.store.abort(job.meta.get("memo_key"), job.jid)
+                    self.metrics.spec_solo_seconds += job.executed_solo_seconds
+                    self.metrics.wasted_solo_seconds += job.executed_solo_seconds
+                    nr.job = None
+                    nr.result = entry.result
+                    # consumed by the authoritative path: counts as invested
+                    # work in carry-over (the prediction was VALIDATED — the
+                    # served flag marks unconsumed sandbox serves only)
+                    nr.status = "reused"
+                    es.phase = "executing"
+                    es.pending_action = None
+                    self._finish_action(es, entry.result, self.sim.now)
+                    continue
                 # promote: job becomes authoritative, non-preemptible
                 nr.job.speculative = False
                 nr.job.priority = 0
@@ -544,12 +626,97 @@ class BPasteRuntime:
                 nr.job.on_complete = chained
             else:
                 # valid path prefix done, node not started: reuse its state
-                # and continue authoritatively from the boundary
+                # and continue authoritatively from the boundary — served
+                # from the store when a valid entry exists (the node was
+                # predicted but never launched, e.g. at saturation there is
+                # no slack to launch with; the entry consumes it coherently
+                # so descendants keep their pseudo-history), else executed
                 self._commit_path(es, hr, i, inclusive=False)
                 self.metrics.prefix_reuses += 1
                 es.phase = "executing"
                 es.pending_action = None
-                self._start_auth_tool(es, tool, args)
+                entry = self._try_serve(es, tool, args)
+                if entry is not None:
+                    nr.result = entry.result
+                    # consumed: invested for carry-over purposes (validated
+                    # prediction), unlike unconsumed sandbox serves
+                    nr.status = "reused"
+                    self._finish_action(es, entry.result, self.sim.now)
+                else:
+                    self._start_auth_tool(es, tool, args)
+
+    def _try_serve(self, es: EpisodeState, tool: str, args: Dict[str, Any],
+                   saved: Optional[float] = None) -> Optional[MemoEntry]:
+        """Cache-serve path: satisfy an authoritative action from a valid
+        result-store entry at zero execution cost.  A finished branch match
+        always wins over the store (it commits richer path state); a miss
+        settles its consequences (``_note_misses``) before serving; a
+        matched running/pending node commits its prefix first, then prefers
+        the instant serve over promotion / authoritative re-execution —
+        at saturation nothing launches, so predicted nodes sit pending and
+        the store is the only mechanism that can still satisfy them.
+
+        Safety gating lives in the policy (``EligibilityPolicy.servable``):
+        PREP/READ_ONLY entries serve directly; STAGED_WRITE entries serve by
+        replaying the stored write overlay through the commit barrier onto
+        the live state — version bump, conflict-prune write-set, and
+        footprint invalidation exactly as execution would have produced.
+        Validation is by VALUE over the entry's read footprint against THIS
+        tenant's live state (entries are produced by any tenant; per-key
+        value equality is what makes cross-episode serving exact)."""
+        if not self._memo_on:
+            return None
+        how = self.policy.servable(tool)
+        if how is None:
+            return None
+        entry = self.store.peek(tool, args)
+        if entry is None:
+            return None
+        if not self.store.validate(entry, es.state, eid=es.ep.eid):
+            return None
+        wrote = self.store.apply_writes(entry, es.state)
+        spec = self.tools[tool]
+        if wrote or spec.level >= SafetyLevel.STAGED_WRITE:
+            # served base mutations advance the version like executed ones
+            es.state.bump()
+        es.last_writes = set(getattr(es, "last_writes", set())) | wrote
+        if wrote:
+            self.store.note_writes(entry.writes)
+        entry.serves += 1
+        if saved is None:
+            # counterfactual cost of executing this action authoritatively
+            # (callers with a cheaper counterfactual — e.g. promotion of a
+            # mid-flight run — pass their own ``saved``)
+            saved = spec.det_latency(args)
+            if tool in self.COLD_TOOLS and self.sim.now <= es.warm_until:
+                saved *= self.rcfg.warm_discount
+        self.metrics.memo_serves += 1
+        self.metrics.memo_saved_seconds += saved
+        self.metrics.tenant_memo_saved[es.ep.eid] = (
+            self.metrics.tenant_memo_saved.get(es.ep.eid, 0.0) + saved)
+        return entry
+
+    def _publish_result(self, fac: StateFacade, run_tool: str,
+                        args: Dict[str, Any], result: Any, eid: int,
+                        note: bool = True) -> bool:
+        """Store bookkeeping after one tool execution: footprint-intersection
+        invalidation FIRST (live executions only — sandbox writes are not
+        authoritative and must not invalidate anything), then a level-gated
+        publish so the fresh entry carries the post-write store version.
+        Returns whether an entry was published (pending-entry owners abort
+        on False so subscribed twins can re-arm)."""
+        if not self._memo_on:
+            return False
+        spec = self.tools[run_tool]
+        if note:
+            self.store.note_writes(fac.write_values)
+        if result is None or spec.level >= SafetyLevel.NON_SPECULATIVE:
+            return False
+        self.store.publish(run_tool, dict(args), result,
+                           reads=fac.reads, writes=fac.write_values,
+                           level=spec.level,
+                           solo_work=spec.det_latency(args), eid=eid)
+        return True
 
     def _note_misses(self, es: EpisodeState, tool: str, args):
         if self.builder.assembly == "chain":
@@ -557,7 +724,8 @@ class BPasteRuntime:
             # (rebuilt from scratch in Phase 4)
             for hr in es.hyp_runs:
                 if hr.status == "active" and not hr.used and any(
-                    nr.status in ("done", "running") for nr in hr.node_runs
+                    nr.status in ("done", "running") and not nr.served
+                    for nr in hr.node_runs
                 ):
                     self.metrics.mis_speculations += 1
             self._squash_all(es)
@@ -615,7 +783,8 @@ class BPasteRuntime:
                 if self._still_predicted(hr, preds):
                     continue
             if count_misses and not hr.used and any(
-                nr.status in ("done", "running") for nr in hr.node_runs
+                nr.status in ("done", "running") and not nr.served
+                for nr in hr.node_runs
             ):
                 self.metrics.mis_speculations += 1
             self._squash_one(es, hr)
@@ -634,8 +803,11 @@ class BPasteRuntime:
             return False
         if self.builder.assembly == "chain":
             return pend[0].run_tool in preds
+        # store-served nodes are NOT investment: they cost nothing, and
+        # counting them let pristine stale branches masquerade as invested,
+        # crowding fresh current-context hypotheses out of the beam
         invested = any(nr.status in ("done", "running", "reused", "promoted")
-                       for nr in hr.node_runs)
+                       and not nr.served for nr in hr.node_runs)
         return invested and any(nr.run_tool in preds for nr in pend)
 
     def _snapshot(self, hr: HypRun, nr: NodeRun):
@@ -666,10 +838,16 @@ class BPasteRuntime:
             nr = hr.node_runs[j]
             if nr.node.kind != NodeKind.TOOL or nr.status not in ("done", "promoted", "reused"):
                 continue
+            fac.begin_call()              # per-node footprint for the store
             try:
                 nr.result = execute_tool(nr.run_tool, nr.resolved_args, fac)
             except KeyError:
                 pass
+            else:
+                # the replay just validated this result against the LIVE
+                # state — publish it for every tenant
+                self._publish_result(fac, nr.run_tool, nr.resolved_args,
+                                     nr.result, es.ep.eid)
             # a committed node is consumed by the authoritative path either
             # way; leaving promotions as "promoted" would strand their
             # descendants (the ready/prior-done tests require done|reused)
@@ -705,6 +883,9 @@ class BPasteRuntime:
                 continue
             if nr.status == "running":
                 self.sim.preempt(job.jid)
+                # the in-flight computation dies with the job: release the
+                # store's pending entry so subscribed twins can re-arm
+                self.store.abort(job.meta.get("memo_key"), job.jid)
                 self.metrics.spec_solo_seconds += job.executed_solo_seconds
                 self.metrics.wasted_solo_seconds += job.executed_solo_seconds
                 nr.status = "pending"
@@ -749,6 +930,7 @@ class BPasteRuntime:
                 break
             spec_jobs.remove(victim)
             self.sim.preempt(victim.jid)
+            self.store.abort(victim.meta.get("memo_key"), victim.jid)
             # the preempted job's partial burn is discarded (a relaunch
             # starts a fresh job), so settle it now: no completion callback
             # will ever claim it, and discarded progress is wasted work even
@@ -782,7 +964,7 @@ class BPasteRuntime:
         admitted demand across tenants inside the greedy loop."""
         if self.rcfg.mode == "serial":
             return
-        pool: List[Tuple[EpisodeState, HypRun]] = []
+        pool: List[Tuple[EpisodeState, HypRun, List[int]]] = []
         n_active = 0
         for es in self.episodes:
             if es.phase not in ("reasoning", "executing"):
@@ -798,11 +980,12 @@ class BPasteRuntime:
             # _launch_nodes keeps launching its ready siblings without
             # re-admission (scoring it again would double-charge its
             # in-flight demand against the packed prefix rho)
-            pool.extend(
-                (es, hr) for hr in active
-                if not any(nr.status == "running" for nr in hr.node_runs)
-                and self._launch_frontier(es, hr)
-            )
+            for hr in active:
+                if any(nr.status == "running" for nr in hr.node_runs):
+                    continue
+                fr = self._launch_frontier(es, hr)
+                if fr:
+                    pool.append((es, hr, fr))
         self._admit_shared(pool, n_active)
         self._launch_nodes()
 
@@ -892,7 +1075,7 @@ class BPasteRuntime:
         return self._packed_beam
 
     def _fairness_weights(
-        self, pool: List[Tuple[EpisodeState, HypRun]]
+        self, pool: List[Tuple[EpisodeState, HypRun, List[int]]]
     ) -> Optional[np.ndarray]:
         """Per-candidate EU multipliers for the shared beam: tenants already
         holding in-flight speculative capacity get discounted so one
@@ -901,7 +1084,7 @@ class BPasteRuntime:
         off or only one tenant has candidates — a uniform weight is a common
         positive factor and cannot change decisions, so skipping it keeps
         single-episode runs bit-identical to the pre-shared-beam path."""
-        eids = [es.ep.eid for es, _ in pool]
+        eids = [es.ep.eid for es, _, _ in pool]
         if self.rcfg.fairness_alpha <= 0 or len(set(eids)) < 2:
             return None
         cap = self.machine.cap_array()
@@ -915,9 +1098,77 @@ class BPasteRuntime:
         w = tenant_fairness_weights(share, self.rcfg.fairness_alpha)
         return np.array([w[eid] for eid in eids])
 
-    def _admit_shared(self, pool: List[Tuple[EpisodeState, HypRun]],
+    def _memo_terms(
+        self, pool: List[Tuple[EpisodeState, HypRun, List[int]]]
+    ) -> Tuple[Optional[np.ndarray], Optional[np.ndarray]]:
+        """Per-candidate reuse term for admission: a per-node ``memo_mask``
+        marking launch-frontier TOOL nodes whose (tool, resolved args)
+        already has a valid store entry, and the matching memo-excluded
+        prefix ρ.  Memoized nodes contribute EU at zero demand — admission
+        learns to prefer branches the store will partly serve for free.
+        Rides ALONGSIDE the PackedBeam cache (store contents change every
+        tick, the pack does not).  Returns (None, None) when the store has
+        nothing to offer (keeps the no-memo path bit-identical)."""
+        if not self._memo_on or not self.store.entries:
+            return None, None
+        # pass 1: which frontier nodes are servable?  Validation runs
+        # against the BRANCH SANDBOX — exactly what the launch-time serve
+        # will check — so a node whose entry conflicts with the branch's own
+        # staged overlay is never scored as zero-demand and then executed
+        # for real (over-admission past the Eq. 5 limit).
+        excls: List[set] = []
+        any_memo = False
+        for es, hr, fr in pool:
+            excl = set()
+            for i in fr:
+                nr = hr.node_runs[i]
+                node = nr.node
+                if node.kind != NodeKind.TOOL or node.idx >= self.scorer.n_max:
+                    continue
+                if not self.store.has_tool(nr.run_tool):
+                    continue                  # cheap pre-filter
+                if node.bindings:
+                    args = self._resolve_node_args(es, hr, i)
+                    if len(args) < len(node.bindings):
+                        continue
+                else:
+                    args = nr.resolved_args
+                entry = self.store.peek(nr.run_tool, args)
+                # track=False: a scoring-time peek must not hand the branch
+                # a base read-set it never earned (the launch-time serve
+                # re-validates with tracking ON before anything is consumed)
+                if entry is None or not self.store.validate(
+                        entry, hr.sandbox, track=False):
+                    continue
+                excl.add(node.idx)
+                any_memo = True
+            excls.append(excl)
+        if not any_memo:
+            return None, None                 # no rho recompute on the hot path
+        # pass 2: masks + memo-excluded prefix demand.  Unexcluded rows get
+        # the STATIC prefix_rho(h), memoized per hid (hypotheses are
+        # immutable after build) so steady-state ticks skip the Python DP.
+        masks = np.zeros((len(pool), self.scorer.n_max))
+        rhos = np.zeros((len(pool), RESOURCE_DIMS))
+        for ci, (es, hr, fr) in enumerate(pool):
+            excl = excls[ci]
+            if excl:
+                for idx in excl:
+                    masks[ci, idx] = 1.0
+                rhos[ci] = prefix_rho(hr.hyp, frozenset(excl))
+            else:
+                hid = hr.hyp.hid
+                cached = self._rho_cache.get(hid)
+                if cached is None:
+                    if len(self._rho_cache) > 4096:
+                        self._rho_cache.clear()   # bounded (hids grow per build)
+                    cached = self._rho_cache[hid] = prefix_rho(hr.hyp)
+                rhos[ci] = cached
+        return masks, rhos
+
+    def _admit_shared(self, pool: List[Tuple[EpisodeState, HypRun, List[int]]],
                       n_active: int):
-        cand = [hr for _, hr in pool]
+        cand = [hr for _, hr, _ in pool]
         if not cand:
             return
         # beam fullness when an admission pass actually runs: every active
@@ -938,18 +1189,21 @@ class BPasteRuntime:
                 hr.meta_admitted = True
             return
         weights = self._fairness_weights(pool)
+        memo_masks, memo_rho = self._memo_terms(pool)
         hyps = [hr.hyp for hr in cand]
         t0 = time.perf_counter()
         if self.rcfg.admission == "reference":
             res = greedy_admit(
                 hyps, self.scorer, slack, budget, auth_rho,
                 idle_window=self.rcfg.idle_window, weights=weights,
+                memo_masks=memo_masks, memo_rho=memo_rho,
             )
         else:
             res = fused_admit(
                 hyps, self.scorer, slack, budget, auth_rho,
                 idle_window=self.rcfg.idle_window,
                 packed=self._packed_for(cand), weights=weights,
+                memo_masks=memo_masks, memo_rho=memo_rho,
             )
         self.metrics.sched_admit_seconds += time.perf_counter() - t0
         self.metrics.sched_admit_calls += 1
@@ -1010,8 +1264,10 @@ class BPasteRuntime:
         """Start admitted frontier nodes in descending admission-EU order
         (Algorithm 1: highest-value branches claim the slack first — with a
         wide beam, list order would let low-value branches starve the
-        valuable ones at the capacity boundary)."""
-        cap = self.machine.cap_array()
+        valuable ones at the capacity boundary).  The capacity fit check
+        lives in ``_start_spec_node`` AFTER the store serve attempt: serving
+        a memoized node costs zero slack, so a saturated machine must not
+        block it — that is exactly the regime the store exists for."""
         ready: List[Tuple[float, int, int, EpisodeState, HypRun]] = []
         for es in self.episodes:
             for hr in es.hyp_runs:
@@ -1021,30 +1277,80 @@ class BPasteRuntime:
                     ready.append((-hr.eu, hr.hyp.hid, i, es, hr))
         ready.sort(key=lambda t: t[:3])
         for _, _, i, es, hr in ready:
-            nr = hr.node_runs[i]
-            demand = nr.node.rho.as_array()
-            total = self.sim.running_demand() + demand
-            if np.any((total > cap + 1e-9) & (demand > 1e-12)):
-                continue                          # no slack on a dim we need
             self._start_spec_node(es, hr, i)
+
+    def _serve_spec(self, es: EpisodeState, hr: HypRun, i: int,
+                    entry: MemoEntry) -> None:
+        """Serve a store entry INTO a sandbox: the node completes instantly
+        (zero slack burned), its staged writes land in the branch overlay,
+        and validation reads have already been pulled through the CowView —
+        so the entry's dependencies sit in the branch's base read-set and
+        conflict pruning covers served results like executed ones."""
+        nr = hr.node_runs[i]
+        self.store.apply_writes(entry, hr.sandbox)
+        nr.result = entry.result
+        nr.status = "done"
+        nr.served = True
+        entry.serves += 1
+        hr.sandbox.record(Event("tool", nr.run_tool, dict(nr.resolved_args),
+                                nr.result, self.sim.now, self.sim.now,
+                                es.ep.eid))
+        self._snapshot(hr, nr)
+        self.metrics.memo_hits += 1
+        # no spec_solo_seconds: nothing executed, so a later squash books
+        # zero waste for this node (job stays None)
 
     def _start_spec_node(self, es: EpisodeState, hr: HypRun, i: int) -> bool:
         nr = hr.node_runs[i]
+        if nr.waiting:
+            return False                  # subscribed to an in-flight twin
         if nr.node.kind == NodeKind.TOOL and nr.node.bindings:
             nr.resolved_args = self._resolve_node_args(es, hr, i)
             if len(nr.resolved_args) < len(nr.node.bindings):
                 return False                  # inputs not materialized yet
+        key = None
+        if self._memo_on and nr.node.kind == NodeKind.TOOL:
+            entry = self.store.peek(nr.run_tool, nr.resolved_args)
+            if entry is not None and self.store.validate(entry, hr.sandbox):
+                self._serve_spec(es, hr, i, entry)
+                return True
+            key = memo_key(nr.run_tool, nr.resolved_args)
+            if self.store.is_pending(key):
+                # an identical computation is in flight (another branch or
+                # tenant): subscribe to its result instead of burning the
+                # slack twice
+                def on_pub(pub_entry, es=es, hr=hr, i=i):
+                    nr2 = hr.node_runs[i]
+                    nr2.waiting = False
+                    if pub_entry is None:         # owner preempted: re-arm
+                        return
+                    if hr.status != "active" or nr2.status != "pending":
+                        return
+                    if not self.store.validate(pub_entry, hr.sandbox):
+                        return
+                    self._serve_spec(es, hr, i, pub_entry)
+
+                self.store.subscribe(key, on_pub)
+                nr.waiting = True
+                self.metrics.memo_dedups += 1
+                return False
         spec = self.tools[nr.run_tool]
+        demand = nr.node.rho.as_array()
+        total = self.sim.running_demand() + demand
+        if np.any((total > self._cap + 1e-9) & (demand > 1e-12)):
+            return False                      # no slack on a dim we need
         dur = spec.det_latency(nr.resolved_args)
         if nr.run_tool in self.COLD_TOOLS and self.sim.now <= es.warm_until:
             dur *= self.rcfg.warm_discount
 
         def done(sim: Simulator, job: SimJob, es=es, hr=hr, i=i):
             nr2 = hr.node_runs[i]
+            mk = job.meta.get("memo_key")
             if nr2.run_tool == "env_warmup":
                 # warmth is tenant-local: this episode's environment only
                 es.warm_until = max(es.warm_until, sim.now + self.rcfg.warm_ttl)
             if hr.status != "active" and nr2.status != "promoted":
+                self.store.abort(mk, job.jid)
                 return
             fac = StateFacade(hr.sandbox)
             try:
@@ -1058,6 +1364,14 @@ class BPasteRuntime:
                 nr2.status = "done"
             self._snapshot(hr, nr2)
             self.metrics.spec_solo_seconds += job.work
+            if mk is not None:
+                # publish the sandbox-computed result (per-call footprint;
+                # sandbox writes are NOT authoritative, so no note_writes) —
+                # resolves the pending entry and feeds every subscriber
+                if not self._publish_result(fac, nr2.run_tool,
+                                            nr2.resolved_args, nr2.result,
+                                            es.ep.eid, note=False):
+                    self.store.abort(mk, job.jid)
 
         job = self.sim.new_job(
             f"spec:{nr.run_tool}[h{hr.hyp.hid}.{i}]",
@@ -1065,6 +1379,9 @@ class BPasteRuntime:
             meta={"eu": hr.eu, "node_run": nr, "hyp": hr.hyp.hid,
                   "eid": es.ep.eid},
         )
+        if key is not None:
+            self.store.begin(key, job.jid)
+            job.meta["memo_key"] = key
         nr.job = job
         nr.status = "running"
         self.sim.start(job)

@@ -54,6 +54,26 @@ class EligibilityPolicy:
             return (self.transforms[tool], True)
         return None
 
+    def servable(self, tool: str) -> Optional[str]:
+        """How a stored result may satisfy an AUTHORITATIVE action from the
+        cross-episode result store (memo.py):
+
+          "direct" — PREP_ONLY / READ_ONLY: the result is replayable by
+                     definition, serve it as-is;
+          "replay" — STAGED_WRITE: serve by replaying the stored write
+                     overlay through the commit barrier onto the live state
+                     (version bump included), allowed only when the operator
+                     admits staged speculation at all;
+          None     — NON_SPECULATIVE (and staged writes under a stricter
+                     policy): always re-execute authoritatively.
+        """
+        lvl = self.level(tool)
+        if lvl <= SafetyLevel.READ_ONLY:
+            return "direct"
+        if lvl == SafetyLevel.STAGED_WRITE and self.max_level >= SafetyLevel.STAGED_WRITE:
+            return "replay"
+        return None
+
     def requires_sandbox_write(self, tool: str) -> bool:
         return self.level(tool) >= SafetyLevel.STAGED_WRITE
 

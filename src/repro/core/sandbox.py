@@ -18,6 +18,19 @@ from repro.core.events import Event
 _TOMBSTONE = object()
 
 
+class _Absent:
+    """Footprint marker: a read fell through to the caller's default — the
+    key was not present in the state.  Shared by the executor's per-call
+    footprint recording and the result store's validation (memo.py); it must
+    be one object so identity checks agree across modules."""
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return "<ABSENT>"
+
+
+ABSENT = _Absent()
+
+
 class CowView:
     """Copy-on-write dict view over a base dict."""
 
@@ -150,5 +163,13 @@ class Sandbox:
         child.M._overlay.update(self.M._overlay)
         child.F._overlay.update(self.F._overlay)
         child.E._overlay.update(self.E._overlay)
+        # the child's validity depends on everything its inherited prefix
+        # read from the live base: without seeding the read-sets, an
+        # authoritative write to a key only the PARENT prefix read slips
+        # past the runtime's write-conflict check and the child replays on
+        # silently-invalidated state
+        child.M.base_reads |= self.M.base_reads
+        child.F.base_reads |= self.F.base_reads
+        child.E.base_reads |= self.E.base_reads
         child.H = list(self.H)
         return child

@@ -54,7 +54,7 @@ class PackedBeam:
     k_valid: np.ndarray       # (K,) hypothesis mask
 
 
-def prefix_rho(h: BranchHypothesis) -> np.ndarray:
+def prefix_rho(h: BranchHypothesis, exclude: frozenset = frozenset()) -> np.ndarray:
     """Worst-case concurrent demand of the safe-prefix frontier region.
 
     Nodes on one root path run serially (ancestor gating), but sibling
@@ -63,7 +63,11 @@ def prefix_rho(h: BranchHypothesis) -> np.ndarray:
     understate a branchy prefix.  Per-dimension DP over the prefix
     sub-forest: conc(v) = max(rho_v, Σ_children conc(child)); disconnected
     prefix roots co-run, so their conc sums.  Reduces to the element-wise
-    max for chains."""
+    max for chains.
+
+    ``exclude`` holds node idxs that demand NOTHING (memoized nodes — the
+    result store serves them without execution); they stay in the tree
+    structure so serial parent->child paths remain connected."""
     prefix = {n.idx: n for n in h.safe_prefix()}
     if not prefix:
         return np.zeros(RESOURCE_DIMS)
@@ -86,7 +90,8 @@ def prefix_rho(h: BranchHypothesis) -> np.ndarray:
             children.setdefault(anc, []).append(idx)
 
     def conc(i: int) -> np.ndarray:
-        own = prefix[i].rho.as_array()
+        own = (np.zeros(RESOURCE_DIMS) if i in exclude
+               else prefix[i].rho.as_array())
         kids = children.get(i)
         if not kids:
             return own
@@ -138,34 +143,56 @@ def _critical_path(adj, lat, mask, n_iters: int):
 
 
 def static_gain_terms(node_lat, node_prob, node_mask, prefix_mask, adj,
-                      idle_window, n_nodes: int):
+                      idle_window, n_nodes: int, memo_mask=None, xp=jnp):
     """Per-hypothesis terms independent of the admitted set: prefix solo
-    latency, ΔO (idle-window-capped), and ΔU (post-prefix critical path).
+    latency, the prefix's EXECUTED latency, ΔO (idle-window-capped), and ΔU
+    (post-prefix critical path).
+
+    ``memo_mask`` (K, N) marks prefix nodes whose results the cross-episode
+    store already holds (the reuse term): they still contribute their
+    latency to ΔO — the agent is served the hidden serial time either way —
+    but they need no execution, so they drop out of ``l_exec`` (the latency
+    exposed to interference in ΔI) exactly as they drop out of the prefix ρ
+    the caller passes alongside (``prefix_rho(h, exclude=...)``).
 
     Traceable helper shared by ``score_beam`` and the fused admission kernel
     — the latter hoists these out of its while_loop since only ΔI depends on
-    the admitted demand."""
+    the admitted demand.  Returns (l_solo, l_exec, delta_o, delta_u)."""
     l_solo = (node_lat * prefix_mask).sum(axis=1)
-    delta_o = jnp.minimum(l_solo, idle_window)
+    if memo_mask is None:
+        l_exec = l_solo
+    else:
+        l_exec = (node_lat * prefix_mask * (1.0 - memo_mask)).sum(axis=1)
+    delta_o = xp.minimum(l_solo, idle_window)
     post_mask = node_mask * (1.0 - prefix_mask)
     exp_lat = node_lat * node_prob
-    delta_u = _critical_path(adj, exp_lat, post_mask, n_iters=n_nodes)
-    return l_solo, delta_o, delta_u
+    if xp is jnp:
+        delta_u = _critical_path(adj, exp_lat, post_mask, n_iters=n_nodes)
+    else:                                  # host-side numpy fast path
+        dist = (exp_lat * post_mask).copy()
+        for _ in range(n_nodes):           # masked longest-path relaxation
+            via = np.max(adj * (dist[:, :, None] + (exp_lat * post_mask)[:, None, :]),
+                         axis=1)
+            dist = np.maximum(dist, via * (post_mask > 0))
+        delta_u = dist.max(axis=1)
+    return l_solo, l_exec, delta_o, delta_u
 
 
-def eu_given_admitted(l_solo, delta_o, delta_u, q, rho, k_valid,
+def eu_given_admitted(l_exec, delta_o, delta_u, q, rho, k_valid,
                       admitted_rho, cap, lam, mu, idle_window, xp=jnp):
     """EU (Eq. 3) for every hypothesis conditioned on the admitted demand.
 
     Only ΔI varies with the admitted set; the static terms come from
-    ``static_gain_terms``.  ``xp`` selects the array backend — jnp inside
-    the jitted kernels, np for the host-side small-beam fast path — so the
-    estimator has exactly one implementation.  Returns (eu (K,),
+    ``static_gain_terms``.  ``l_exec`` is the prefix latency that actually
+    EXECUTES (memoized nodes excluded — they are served, not run, so no
+    interference touches them).  ``xp`` selects the array backend — jnp
+    inside the jitted kernels, np for the host-side small-beam fast path —
+    so the estimator has exactly one implementation.  Returns (eu (K,),
     delta_i (K,))."""
     # ΔI: bottleneck stretch of prefix under admitted demand + inflicted
     util = (admitted_rho[None, :] + rho) / cap[None, :]          # (K,R)
     stretch = xp.where(rho > 0, xp.maximum(util, 1.0), 1.0).max(axis=1)
-    self_pen = l_solo * (stretch - 1.0)
+    self_pen = l_exec * (stretch - 1.0)
     # inflicted on admitted set: admitted work stretched by new util
     adm_util = admitted_rho / cap
     adm_stretch_before = xp.maximum(adm_util, 1.0).max()
@@ -181,16 +208,20 @@ def eu_given_admitted(l_solo, delta_o, delta_u, q, rho, k_valid,
 @functools.partial(jax.jit, static_argnames=("n_nodes",))
 def score_beam(
     node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid,
-    admitted_rho, cap, lam, mu, idle_window, n_nodes: int,
+    memo_mask, admitted_rho, cap, lam, mu, idle_window, n_nodes: int,
 ):
     """Vectorized EU for every hypothesis given the admitted demand.
 
+    ``memo_mask`` (K, N) marks store-memoized prefix nodes (zero execution,
+    zero interference exposure); ``rho`` must already exclude them.
+
     Returns (eu (K,), delta_o, delta_u, delta_i)."""
-    l_solo, delta_o, delta_u = static_gain_terms(
-        node_lat, node_prob, node_mask, prefix_mask, adj, idle_window, n_nodes
+    l_solo, l_exec, delta_o, delta_u = static_gain_terms(
+        node_lat, node_prob, node_mask, prefix_mask, adj, idle_window,
+        n_nodes, memo_mask=memo_mask,
     )
     eu, delta_i = eu_given_admitted(
-        l_solo, delta_o, delta_u, q, rho, k_valid, admitted_rho, cap,
+        l_exec, delta_o, delta_u, q, rho, k_valid, admitted_rho, cap,
         lam, mu, idle_window,
     )
     return eu, delta_o, delta_u, delta_i
@@ -232,11 +263,26 @@ class Scorer:
         hyps: Sequence[BranchHypothesis],
         admitted_rho: np.ndarray,
         idle_window: float = 10.0,
+        memo_masks: Optional[np.ndarray] = None,
+        memo_rho: Optional[np.ndarray] = None,
     ) -> Tuple[np.ndarray, PackedBeam, dict]:
+        """``memo_masks`` (len(hyps), N) / ``memo_rho`` (len(hyps), R) carry
+        the store-reuse term: per-node memoized flags and the matching
+        memo-excluded prefix demand.  They ride ALONGSIDE the packed tables
+        (like fairness weights) — the PackedBeam stays store-agnostic, so
+        runtime pack caches remain valid as the store fills."""
         pb = pack_beam(hyps, self.k_max, self.n_max)
+        K = pb.q.shape[0]
+        mm = np.zeros((K, self.n_max))
+        rho = pb.rho
+        if memo_masks is not None:
+            mm[: len(hyps), :] = np.asarray(memo_masks, float)
+        if memo_rho is not None:
+            rho = rho.copy()
+            rho[: len(hyps), :] = np.asarray(memo_rho, float)
         eu, do, du, di = score_beam(
             pb.node_lat, pb.node_prob, pb.node_mask, pb.prefix_mask, pb.adj,
-            pb.q, pb.rho, pb.k_valid,
+            pb.q, rho, pb.k_valid, jnp.asarray(mm),
             jnp.asarray(admitted_rho), jnp.asarray(self.machine.cap_array()),
             self.lam, self.mu, idle_window, n_nodes=self.n_max,
         )
@@ -251,6 +297,8 @@ class Scorer:
         hyps: Sequence[BranchHypothesis],
         admitted_rho: np.ndarray,
         idle_window: float = 10.0,
+        memo_masks: Optional[np.ndarray] = None,
+        memo_rho: Optional[np.ndarray] = None,
     ) -> np.ndarray:
         """EU for EVERY hypothesis, chunked over ``k_max``-sized beams.
 
@@ -263,6 +311,12 @@ class Scorer:
         out = []
         for i in range(0, len(hyps), self.k_max):
             chunk = hyps[i:i + self.k_max]
-            eu, _, _ = self.score(chunk, admitted_rho, idle_window)
+            eu, _, _ = self.score(
+                chunk, admitted_rho, idle_window,
+                memo_masks=None if memo_masks is None
+                else memo_masks[i:i + self.k_max],
+                memo_rho=None if memo_rho is None
+                else memo_rho[i:i + self.k_max],
+            )
             out.append(eu[: len(chunk)])
         return np.concatenate(out)

@@ -53,8 +53,10 @@ def _model_work(rng) -> float:
     return float(np.clip(rng.normal(2.5, 0.5), 1.0, 5.0))
 
 
-def _script_fix_bug(eid: int, rng, var: float = 1.0) -> List[Step]:
+def _script_fix_bug(eid: int, rng, var: float = 1.0,
+                    ident: Optional[str] = None) -> List[Step]:
     """locate-examine + edit-verify motif."""
+    ident = str(eid) if ident is None else ident
     st = AgentState()
     fac = StateFacade(st)
     steps: List[Step] = []
@@ -63,7 +65,7 @@ def _script_fix_bug(eid: int, rng, var: float = 1.0) -> List[Step]:
         steps.append(Step(_model_work(rng), tool, dict(args)))
         return execute_tool(tool, args, fac)
 
-    r = act("grep", pattern=f"bug_{eid}")
+    r = act("grep", pattern=f"bug_{ident}")
     path = r["path"]
     act("read", path=path)
     if var > 0 and rng.random() < 0.35 * var:
@@ -79,8 +81,10 @@ def _script_fix_bug(eid: int, rng, var: float = 1.0) -> List[Step]:
     return steps
 
 
-def _script_research(eid: int, rng, var: float = 1.0) -> List[Step]:
+def _script_research(eid: int, rng, var: float = 1.0,
+                     ident: Optional[str] = None) -> List[Step]:
     """search-visit motif."""
+    ident = str(eid) if ident is None else ident
     st = AgentState()
     fac = StateFacade(st)
     steps: List[Step] = []
@@ -91,7 +95,7 @@ def _script_research(eid: int, rng, var: float = 1.0) -> List[Step]:
 
     n_rounds = int(rng.integers(1, 4))
     for k in range(n_rounds):
-        r = act("search", query=f"topic_{eid}_{k}")
+        r = act("search", query=f"topic_{ident}_{k}")
         if var > 0 and rng.random() < 0.3 * var:
             r2 = act("fetch", url=r["top"])    # bulk-fetch variant
         else:
@@ -102,9 +106,11 @@ def _script_research(eid: int, rng, var: float = 1.0) -> List[Step]:
     return steps
 
 
-def _script_setup(eid: int, rng, var: float = 1.0) -> List[Step]:
+def _script_setup(eid: int, rng, var: float = 1.0,
+                  ident: Optional[str] = None) -> List[Step]:
     """environment setup motif (Level-2 heavy: exercises transformed
     speculation + staged writes)."""
+    ident = str(eid) if ident is None else ident
     st = AgentState()
     fac = StateFacade(st)
     steps: List[Step] = []
@@ -113,11 +119,11 @@ def _script_setup(eid: int, rng, var: float = 1.0) -> List[Step]:
         steps.append(Step(_model_work(rng), tool, dict(args)))
         return execute_tool(tool, args, fac)
 
-    act("pip_install", pkg=f"dep_{eid}")
+    act("pip_install", pkg=f"dep_{ident}")
     if var > 0 and rng.random() < 0.3 * var:
-        act("pip_install", pkg=f"extra_{eid}")   # second dependency variant
+        act("pip_install", pkg=f"extra_{ident}")  # second dependency variant
     act("build")
-    r = act("grep", pattern=f"entry_{eid}")
+    r = act("grep", pattern=f"entry_{ident}")
     act("test", target=r["path"])
     if var > 0 and rng.random() < 0.25 * var:
         act("edit", path=r["path"], change="fix")   # post-setup patch variant
@@ -125,12 +131,14 @@ def _script_setup(eid: int, rng, var: float = 1.0) -> List[Step]:
     return steps
 
 
-def _script_audit(eid: int, rng, var: float = 1.0) -> List[Step]:
+def _script_audit(eid: int, rng, var: float = 1.0,
+                  ident: Optional[str] = None) -> List[Step]:
     """cross-cutting review motif: locate-examine interleaved with research
     before an edit-verify tail.  Passes THROUGH the other motifs' contexts
     with different continuations (e.g. grep,read -> search instead of edit;
     visit,parse -> edit instead of search), so shared-prefix fan-out shows
     up in the mined tables."""
+    ident = str(eid) if ident is None else ident
     st = AgentState()
     fac = StateFacade(st)
     steps: List[Step] = []
@@ -139,9 +147,9 @@ def _script_audit(eid: int, rng, var: float = 1.0) -> List[Step]:
         steps.append(Step(_model_work(rng), tool, dict(args)))
         return execute_tool(tool, args, fac)
 
-    r = act("grep", pattern=f"audit_{eid}")
+    r = act("grep", pattern=f"audit_{ident}")
     act("read", path=r["path"])
-    s = act("search", query=f"ref_{eid}")
+    s = act("search", query=f"ref_{ident}")
     v = act("visit", url=s["top"])
     act("parse", path=v["path"])
     act("edit", path=r["path"], change="fix")
@@ -171,6 +179,15 @@ class WorkloadConfig:
                                   # tenants present at t=0 (legacy, and the
                                   # draw-for-draw reproduction guarantee:
                                   # no extra rng draws happen when off)
+    shared_frac: float = 0.0      # probability an episode works on a SHARED
+                                  # subject (drawn from a small global pool)
+                                  # instead of its private one: tenants then
+                                  # overlap on queries/paths/packages — the
+                                  # corpus-overlap regime cross-tenant result
+                                  # caching targets.  0 = fully tenant-
+                                  # private (legacy, draw-for-draw: no rng
+                                  # draw is taken when off)
+    shared_pool: int = 4          # number of distinct shared subjects
 
 
 def make_episodes(cfg: WorkloadConfig) -> List[Episode]:
@@ -185,7 +202,13 @@ def make_episodes(cfg: WorkloadConfig) -> List[Episode]:
         if cfg.variation > 0 and "audit" not in dict(cfg.mix) \
                 and rng.random() < 0.25 * cfg.variation:
             kind = "audit"
-        steps = KINDS[kind](eid, rng, cfg.variation)
+        # shared-corpus draw (serving workloads): some tenants work the same
+        # subject, so identical (tool, args) invocations recur ACROSS
+        # episodes — drawn only when the knob is on (legacy reproduction)
+        ident = None
+        if cfg.shared_frac > 0 and rng.random() < cfg.shared_frac:
+            ident = f"shared{int(rng.integers(0, max(cfg.shared_pool, 1)))}"
+        steps = KINDS[kind](eid, rng, cfg.variation, ident=ident)
         # Poisson-ish open arrivals: cumulative exponential gaps, drawn
         # AFTER the episode's own draws so arrival_stagger=0 keeps every
         # legacy stream draw-for-draw (no draw is taken when off)

@@ -235,6 +235,122 @@ def test_fairness_weight_flips_starved_tenant_in():
 
 
 # ======================================================================
+# Result-store reuse term (memo mask: memoized prefix nodes contribute EU
+# at zero demand) — must thread identically through every admission path
+# ======================================================================
+
+def _random_memo(rng, hyps, n_max=12):
+    """Random per-node memo masks over each hypothesis' safe prefix, plus
+    the matching memo-excluded prefix demand (what the runtime computes)."""
+    masks = np.zeros((len(hyps), n_max))
+    rhos = np.zeros((len(hyps), RESOURCE_DIMS))
+    for i, h in enumerate(hyps):
+        excl = set()
+        for n in h.safe_prefix():
+            if n.idx < n_max and rng.random() < 0.5:
+                masks[i, n.idx] = 1.0
+                excl.add(n.idx)
+        rhos[i] = scoring.prefix_rho(h, frozenset(excl))
+    return masks, rhos
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+@pytest.mark.parametrize("k", [3, 6, 10])
+def test_memo_mask_fused_matches_reference(seed, k):
+    rng = np.random.default_rng(700 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = _random_beam(rng, k)
+    masks, rhos = _random_memo(rng, hyps)
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    ref = admission.greedy_admit(hyps, sc, slack, budget, auth,
+                                 memo_masks=masks, memo_rho=rhos)
+    fus = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                memo_masks=masks, memo_rho=rhos)
+    _assert_equivalent(ref, fus, hyps)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_memo_mask_numpy_path_matches_kernel(seed):
+    rng = np.random.default_rng(800 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = _random_beam(rng, 6)
+    masks, rhos = _random_memo(rng, hyps)
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    via_np = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                   memo_masks=masks, memo_rho=rhos,
+                                   small_beam_threshold=len(hyps))
+    via_krn = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                    memo_masks=masks, memo_rho=rhos,
+                                    small_beam_threshold=0)
+    _assert_equivalent(via_np, via_krn, hyps)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_memo_mask_tree_beam_with_weights(seed):
+    """Memo + fairness weights together, on tree-shaped beams: the full
+    shared-beam configuration the runtime actually runs."""
+    rng = np.random.default_rng(900 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_tree_hyp(h, rng) for h in range(6)]
+    masks, rhos = _random_memo(rng, hyps)
+    weights = np.array([1.0 if h % 2 else 0.7 for h in range(6)])
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    ref = admission.greedy_admit(hyps, sc, slack, budget, auth,
+                                 weights=weights, memo_masks=masks,
+                                 memo_rho=rhos)
+    fus = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                weights=weights, memo_masks=masks,
+                                memo_rho=rhos)
+    _assert_equivalent(ref, fus, hyps)
+
+
+def test_memo_zero_mask_changes_nothing():
+    """An all-zero memo mask with the unmodified prefix ρ must reproduce the
+    no-memo decisions exactly (the no-store path stays bit-identical)."""
+    rng = np.random.default_rng(13)
+    sc = scoring.Scorer(Machine())
+    hyps = _random_beam(rng, 8)
+    masks = np.zeros((8, 12))
+    rhos = np.stack([scoring.prefix_rho(h) for h in hyps])
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    plain = admission.fused_admit(hyps, sc, slack, budget, auth)
+    memo = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                 memo_masks=masks, memo_rho=rhos)
+    assert sorted(h.hid for h in plain.admitted) == sorted(
+        h.hid for h in memo.admitted)
+    for hid, val in plain.eu.items():
+        np.testing.assert_allclose(memo.eu[hid], val, rtol=1e-5)
+
+
+def test_memo_mask_admits_zero_demand_branch_at_capacity():
+    """A fully-memoized prefix demands nothing: it must be admitted even
+    when the limit is exhausted — the reuse term's whole point."""
+    sc = scoring.Scorer(Machine())
+    h = _mk_hyp(0, ["grep", "read"], q=0.8)
+    masks = np.zeros((1, 12))
+    for n in h.safe_prefix():
+        masks[0, n.idx] = 1.0
+    rhos = np.zeros((1, RESOURCE_DIMS))
+    tight = np.array([1e-6, 1e-6, 1e-6, 1e-6])     # nothing fits
+    none = admission.fused_admit([h], sc, tight, tight, np.zeros(4))
+    assert none.admitted == []
+    served = admission.fused_admit([h], sc, tight, tight, np.zeros(4),
+                                   memo_masks=masks, memo_rho=rhos)
+    assert [x.hid for x in served.admitted] == [0]
+    ref = admission.greedy_admit([h], sc, tight, tight, np.zeros(4),
+                                 memo_masks=masks, memo_rho=rhos)
+    assert [x.hid for x in ref.admitted] == [0]
+
+
+# ======================================================================
 # Wide-beam truncation regression (k_max silently dropped hypotheses)
 # ======================================================================
 

@@ -1,0 +1,518 @@
+"""Cross-episode result store (memo.py), per-call footprint tracking
+(executor.StateFacade), cache-served commits through the runtime, and the
+sandbox CoW ride-along fixes."""
+import numpy as np
+import pytest
+
+from repro.core.events import ResourceVector, SafetyLevel
+from repro.core.executor import StateFacade, execute_tool
+from repro.core.interference import Machine
+from repro.core.memo import ABSENT, ResultStore, memo_key
+from repro.core.patterns import PatternEngine
+from repro.core.runtime import BPasteRuntime, RuntimeConfig, run_mode
+from repro.core.safety import (
+    EligibilityPolicy, FULL_POLICY, PREP_ONLY_POLICY, READ_ONLY_POLICY,
+)
+from repro.core.sandbox import AgentState, Sandbox, _TOMBSTONE
+from repro.core.workload import (
+    Episode, Step, WorkloadConfig, episodes_to_traces, make_episodes,
+)
+
+THOR = Machine(ResourceVector(cpu=6, mem_bw=50, io=200, accel=1))
+
+
+@pytest.fixture(scope="module")
+def engine():
+    eps = make_episodes(WorkloadConfig(seed=1, n_episodes=60))
+    return PatternEngine(context_len=2, min_support=3).fit(episodes_to_traces(eps))
+
+
+# ======================================================================
+# Per-call footprint tracking (executor.StateFacade)
+# ======================================================================
+
+def test_facade_records_read_footprint_with_values():
+    st = AgentState(fs={"p": "hello"})
+    fac = StateFacade(st)
+    execute_tool("read", {"path": "p"}, fac)
+    assert fac.reads == {"F:p": "hello"}
+    assert fac.write_values == {}
+
+
+def test_facade_records_absent_reads():
+    """A read that falls through to the tool's internal default must be
+    distinguishable from a read of a stored None/'' value."""
+    fac = StateFacade(AgentState())
+    execute_tool("read", {"path": "q"}, fac)
+    assert fac.reads["F:q"] is ABSENT
+
+
+def test_facade_records_write_overlay():
+    fac = StateFacade(AgentState())
+    execute_tool("edit", {"path": "p", "change": "fix"}, fac)
+    assert fac.write_values == {"F:p": "edited::fix"}
+    assert fac.writes == {"F:p"}
+
+
+def test_facade_excludes_self_reads():
+    """visit writes F:url then test-style reads of the same key within ONE
+    call must not enter the read footprint (replay reproduces them)."""
+    fac = StateFacade(AgentState())
+    execute_tool("visit", {"url": "u"}, fac)
+    # simulate a same-call read of the just-written key
+    v = fac.F.get("u")
+    assert v.startswith("content::")
+    assert "F:u" not in fac.reads
+    assert "F:u" in fac.write_values
+
+
+def test_facade_begin_call_resets_per_call_footprint():
+    st = AgentState(fs={"p": "x"})
+    fac = StateFacade(st)
+    execute_tool("read", {"path": "p"}, fac)
+    execute_tool("edit", {"path": "p", "change": "a"}, fac)
+    fac.begin_call()
+    assert fac.reads == {} and fac.write_values == {}
+    assert "F:p" in fac.writes                 # cumulative set survives
+    execute_tool("read", {"path": "p"}, fac)
+    assert fac.reads == {"F:p": "edited::a"}   # post-reset reads re-record
+
+
+def test_facade_sandbox_footprint_tracks_per_call():
+    """Sandboxed runs get the same per-call footprint (CowView.base_reads is
+    sandbox-lifetime — over-broad for store entries)."""
+    base = AgentState(fs={"a": 1, "b": 2})
+    sb = Sandbox(base, hid=1)
+    fac = StateFacade(sb)
+    fac.F.get("a")
+    fac.begin_call()
+    fac.F.get("b")
+    assert fac.reads == {"F:b": 2}             # per-call: only b
+    assert sb.F.base_reads == {"a", "b"}       # sandbox-lifetime: both
+
+
+# ======================================================================
+# Satellite: live-write version bumps (visit/fetch/pip_download)
+# ======================================================================
+
+@pytest.mark.parametrize("tool,args", [
+    ("visit", {"url": "u"}),
+    ("fetch", {"url": "u"}),
+    ("pip_download", {"pkg": "p"}),
+])
+def test_authoritative_live_write_bumps_version(tool, args):
+    """Regression: these tools mutate the live base without bumping the
+    version, so Sandbox.is_stale() missed the mutation and replay validity
+    went unchecked."""
+    st = AgentState()
+    sb = Sandbox(st, hid=1)
+    assert not sb.is_stale()
+    execute_tool(tool, args, StateFacade(st))
+    assert st.version > 0
+    assert sb.is_stale()
+
+
+def test_sandboxed_write_never_bumps_live_version():
+    st = AgentState()
+    sb = Sandbox(st, hid=1)
+    execute_tool("visit", {"url": "u"}, StateFacade(sb))
+    assert st.version == 0
+
+
+# ======================================================================
+# Satellite: Sandbox.fork read-set seeding + CoW edge cases
+# ======================================================================
+
+def test_fork_seeds_base_reads():
+    """Regression: fork seeded overlays but dropped base_reads, so the
+    write-conflict check missed conflicts on keys only the parent read."""
+    base = AgentState(fs={"k": 1}, memory={"m": 2}, env={"e": 3})
+    parent = Sandbox(base, hid=1)
+    parent.F.get("k")
+    parent.M.get("m")
+    parent.E.get("e")
+    child = parent.fork(hid=2)
+    assert {"F:k", "M:m", "E:e"} <= child.base_read_set
+
+
+def test_fork_conflict_detected_on_parent_only_read(engine):
+    """Runtime-level: an authoritative write to a key only the PARENT prefix
+    read must squash the forked child branch."""
+    from tests.test_runtime import _manual_runtime, _mk_hyprun
+    rt, es = _manual_runtime(engine, [("grep", {"pattern": "x"}),
+                                      ("read", {"path": "p"})])
+    hr = _mk_hyprun(rt, es, ["read"])
+    hr.sandbox.F.get("p")                      # parent-read key
+    forked = hr.sandbox.fork(hid=77)
+    hr.sandbox = forked                        # branch continues on the fork
+    hr.node_runs[0].status = "running"
+    es.last_writes = {"F:p"}
+    rt._finish_action(es, {"ok": 1}, 1.0)
+    assert hr.status == "squashed"
+
+
+def test_tombstone_delete_through_fork_and_commit():
+    base = AgentState(fs={"gone": 1, "kept": 2})
+    parent = Sandbox(base, hid=1)
+    parent.F.delete("gone")
+    child = parent.fork(hid=2)
+    assert "gone" not in child.F
+    assert child.F.get("gone", "dflt") == "dflt"
+    assert child.commit()
+    assert base.fs == {"kept": 2}
+
+
+def test_cowview_keys_under_overlay_deletes():
+    base = AgentState(fs={"a": 1, "b": 2})
+    sb = Sandbox(base, hid=1)
+    sb.F.delete("a")
+    sb.F.set("c", 3)
+    assert sb.F.keys() == {"b", "c"}
+    sb.F.set("a", 9)                           # resurrect over the tombstone
+    assert sb.F.keys() == {"a", "b", "c"}
+    assert sb.F.get("a") == 9
+
+
+def test_squash_then_reuse_resets_read_set():
+    base = AgentState(fs={"a": 1})
+    sb = Sandbox(base, hid=1)
+    sb.F.get("a")
+    sb.F.set("x", 1)
+    assert sb.base_read_set == {"F:a"}
+    sb.squash()
+    assert sb.base_read_set == set()
+    assert sb.write_set == set()
+    sb.F.get("a")                              # post-squash reads re-track
+    assert sb.base_read_set == {"F:a"}
+
+
+# ======================================================================
+# ResultStore unit semantics
+# ======================================================================
+
+def _publish(store, tool="read", args=None, result=None, reads=None,
+             writes=None, level=SafetyLevel.READ_ONLY, eid=0):
+    return store.publish(tool, args or {"path": "p"},
+                         result if result is not None else {"ok": 1},
+                         reads=reads or {}, writes=writes or {},
+                         level=level, solo_work=1.0, eid=eid)
+
+
+def test_store_publish_peek_roundtrip():
+    store = ResultStore()
+    e = _publish(store, args={"path": "p"}, result={"content": "c"})
+    assert store.peek("read", {"path": "p"}) is e
+    assert store.peek("read", {"path": "q"}) is None
+    # canonical args: order-free
+    store.publish("edit", {"path": "p", "change": "x"}, {"ok": True},
+                  reads={}, writes={}, level=SafetyLevel.STAGED_WRITE,
+                  solo_work=1.0, eid=0)
+    assert store.peek("edit", {"change": "x", "path": "p"}) is not None
+
+
+def test_store_validate_by_value_and_absence():
+    store = ResultStore()
+    e = _publish(store, reads={"F:p": "v1", "F:q": ABSENT})
+    ok = AgentState(fs={"p": "v1"})
+    assert store.validate(e, ok)
+    assert not store.validate(e, AgentState(fs={"p": "OTHER"}))
+    assert not store.validate(e, AgentState(fs={"p": "v1", "q": "appeared"}))
+    assert not store.validate(e, AgentState())          # p missing
+
+
+def test_store_validation_cache_expires_on_version_bump():
+    store = ResultStore()
+    e = _publish(store, reads={"F:p": "v1"})
+    st = AgentState(fs={"p": "v1"})
+    assert store.validate(e, st, eid=5)
+    assert e.validated_at[5] == store.version
+    store.note_writes({"F:unrelated": "x"})             # version bump
+    assert e.validated_at[5] != store.version
+    assert store.validate(e, st, eid=5)                 # revalidates fine
+
+
+def test_store_footprint_invalidation_on_conflicting_write():
+    store = ResultStore()
+    _publish(store, args={"path": "p"}, reads={"F:p": "v1"})
+    _publish(store, tool="parse", args={"path": "z"}, reads={"F:z": "zz"})
+    store.note_writes({"F:p": "CHANGED"})
+    assert store.peek("read", {"path": "p"}) is None    # intersecting: killed
+    assert store.peek("parse", {"path": "z"}) is not None
+    assert store.invalidations == 1
+
+
+def test_store_consistent_write_keeps_entry_valid():
+    """A write that re-asserts the observed value must NOT invalidate."""
+    store = ResultStore()
+    _publish(store, args={"path": "p"}, reads={"F:p": "v1"})
+    store.note_writes({"F:p": "v1"})
+    assert store.peek("read", {"path": "p"}) is not None
+    assert store.invalidations == 0
+
+
+def test_store_absent_read_invalidated_by_value_write():
+    store = ResultStore()
+    _publish(store, args={"path": "p"}, reads={"F:p": ABSENT})
+    store.note_writes({"F:p": "now exists"})
+    assert store.peek("read", {"path": "p"}) is None
+    # tombstone write is consistent with an ABSENT read
+    store2 = ResultStore()
+    _publish(store2, args={"path": "p"}, reads={"F:p": ABSENT})
+    store2.note_writes({"F:p": _TOMBSTONE})
+    assert store2.peek("read", {"path": "p"}) is not None
+
+
+def test_store_apply_writes_live_and_sandbox():
+    store = ResultStore()
+    e = _publish(store, tool="edit", args={"path": "p", "change": "x"},
+                 writes={"F:p": "edited::x", "F:old": _TOMBSTONE},
+                 level=SafetyLevel.STAGED_WRITE)
+    live = AgentState(fs={"old": 1})
+    assert store.apply_writes(e, live) == {"F:p", "F:old"}
+    assert live.fs == {"p": "edited::x"}
+    base = AgentState(fs={"old": 1})
+    sb = Sandbox(base, hid=1)
+    store.apply_writes(e, sb)
+    assert base.fs == {"old": 1}                    # overlay-isolated
+    assert sb.F.get("p") == "edited::x"
+    assert "old" not in sb.F
+
+
+def test_store_pending_subscribe_publish_and_abort():
+    store = ResultStore()
+    key = memo_key("read", {"path": "p"})
+    store.begin(key, owner_jid=11)
+    got = []
+    assert store.subscribe(key, got.append)
+    assert store.is_pending(key)
+    store.abort(key, owner_jid=99)                  # wrong owner: no-op
+    assert store.is_pending(key)
+    e = _publish(store, args={"path": "p"})
+    assert got == [e]
+    assert not store.is_pending(key)
+    # abort path: subscribers woken with None
+    store.begin(key, owner_jid=12)
+    got2 = []
+    store.subscribe(key, got2.append)
+    store.abort(key, owner_jid=12)
+    assert got2 == [None]
+    assert not store.is_pending(key)
+
+
+def test_store_has_tool_tracks_live_entries():
+    store = ResultStore()
+    assert not store.has_tool("read")
+    _publish(store, args={"path": "p"}, reads={"F:p": "v"})
+    assert store.has_tool("read")
+    store.note_writes({"F:p": "x"})
+    assert not store.has_tool("read")
+
+
+# ======================================================================
+# Safety gating of serves
+# ======================================================================
+
+def test_servable_levels():
+    assert FULL_POLICY.servable("search") == "direct"
+    assert FULL_POLICY.servable("env_warmup") == "direct"
+    assert FULL_POLICY.servable("edit") == "replay"
+    assert FULL_POLICY.servable("deploy") is None
+    assert READ_ONLY_POLICY.servable("search") == "direct"
+    assert READ_ONLY_POLICY.servable("edit") is None     # staged not admitted
+    assert PREP_ONLY_POLICY.servable("pip_install") is None
+
+
+# ======================================================================
+# Runtime integration: cache-served commits
+# ======================================================================
+
+def _two_identical_episodes(tool_steps):
+    return [Episode(eid, "manual", [Step(1.0, t, dict(a)) for t, a in tool_steps])
+            for eid in (0, 1)]
+
+
+def test_authoritative_serve_cross_episode(engine):
+    """Tenant 1 repeats tenant 0's read-only action: the second invocation
+    is served from the store at zero execution cost."""
+    eps = _two_identical_episodes([("grep", {"pattern": "shared"}),
+                                   ("read", {"path": "doc"})])
+    m = run_mode(eps, engine, "bpaste", THOR, seed=7,
+                 max_concurrent_episodes=1)
+    assert m.memo_serves >= 1
+    assert m.memo_saved_seconds > 0
+    assert m.tenant_memo_saved.get(1, 0.0) > 0
+
+
+def test_staged_write_serve_replays_overlay(engine):
+    """A served STAGED_WRITE entry must replay its write overlay onto the
+    live state (commit-barrier semantics), leaving the state exactly as
+    execution would."""
+    eps = _two_identical_episodes([("edit", {"path": "p", "change": "fix"}),
+                                   ("test", {"target": "p"})])
+    rt = BPasteRuntime(eps, engine, THOR,
+                       rcfg=RuntimeConfig(mode="bpaste", seed=7))
+    m = rt.run()
+    for es in rt.episodes:
+        assert es.state.fs.get("p") == "edited::fix"
+        assert es.history[1].result["pass"] is True
+    # serial reference: identical final state
+    rt_s = BPasteRuntime(_two_identical_episodes(
+        [("edit", {"path": "p", "change": "fix"}), ("test", {"target": "p"})]),
+        engine, THOR, rcfg=RuntimeConfig(mode="serial", seed=7))
+    rt_s.run()
+    for es_b, es_s in zip(rt.episodes, rt_s.episodes):
+        assert es_b.state.fs == es_s.state.fs
+
+
+def test_serve_refused_when_read_footprint_diverges(engine):
+    """test(target=p) read F:p='edited::a' when published; tenant 1's F:p
+    differs, so the entry must NOT be served there."""
+    eps = [Episode(0, "m", [Step(1.0, "edit", {"path": "p", "change": "a"}),
+                            Step(1.0, "test", {"target": "p"})]),
+           Episode(1, "m", [Step(1.0, "edit", {"path": "p", "change": "b"}),
+                            Step(1.0, "test", {"target": "p"})])]
+    rt = BPasteRuntime(eps, engine, THOR,
+                       rcfg=RuntimeConfig(mode="bpaste", seed=7))
+    rt.run()
+    # both tenants' test results reflect THEIR own file content
+    assert rt.episodes[0].history[1].result["pass"] is False
+    assert rt.episodes[1].history[1].result["pass"] is False
+    assert rt.episodes[0].state.fs["p"] == "edited::a"
+    assert rt.episodes[1].state.fs["p"] == "edited::b"
+
+
+def test_non_speculative_tools_never_served(engine):
+    eps = _two_identical_episodes([("deploy", {})])
+    rt = BPasteRuntime(eps, engine, THOR,
+                       rcfg=RuntimeConfig(mode="bpaste", seed=7))
+    m = rt.run()
+    assert m.memo_serves == 0
+    assert m.auth_actions == 2
+
+
+def test_state_equivalence_with_memo_shared_workload(engine):
+    """The correctness contract under the store: cache-served commits must
+    leave every tenant's final state exactly as serial execution would —
+    including the shared-corpus workload where cross-tenant serves fire."""
+    eps = make_episodes(WorkloadConfig(seed=13, n_episodes=6,
+                                       shared_frac=0.6, shared_pool=2))
+    rt_s = BPasteRuntime(eps, engine, THOR, rcfg=RuntimeConfig(mode="serial"))
+    rt_s.run()
+    rt_b = BPasteRuntime(eps, engine, THOR, rcfg=RuntimeConfig(
+        mode="bpaste", max_concurrent_episodes=3))
+    mb = rt_b.run()
+    for es_s, es_b in zip(rt_s.episodes, rt_b.episodes):
+        assert es_s.state.fs == es_b.state.fs
+        assert es_s.state.env == es_b.state.env
+        assert [e.tool for e in es_s.history] == [e.tool for e in es_b.history]
+        assert [e.args for e in es_s.history] == [e.args for e in es_b.history]
+        assert [e.result for e in es_s.history] == [e.result for e in es_b.history]
+
+
+def test_memo_off_matches_pre_store_runtime(engine):
+    """memo=False must be the exact pre-store runtime (no serve, no dedup,
+    no mask)."""
+    eps = make_episodes(WorkloadConfig(seed=42, n_episodes=6))
+    m = run_mode(eps, engine, "bpaste", THOR, seed=7, memo=False)
+    assert m.memo_serves == m.memo_hits == m.memo_dedups == 0
+    assert m.memo_entries == 0
+
+
+def test_memo_deterministic(engine):
+    eps = make_episodes(WorkloadConfig(seed=9, n_episodes=6, shared_frac=0.5,
+                                       shared_pool=2))
+    m1 = run_mode(eps, engine, "bpaste", THOR, seed=7,
+                  max_concurrent_episodes=2)
+    m2 = run_mode(eps, engine, "bpaste", THOR, seed=7,
+                  max_concurrent_episodes=2)
+    assert m1.makespan == m2.makespan
+    assert m1.memo_serves == m2.memo_serves
+    assert m1.memo_hits == m2.memo_hits
+
+
+def test_memo_fused_matches_reference_runtime(engine):
+    """The memo-mask reuse term must thread identically through the fused
+    kernel and the reference greedy end-to-end."""
+    eps = make_episodes(WorkloadConfig(seed=11, n_episodes=6, shared_frac=0.5,
+                                       shared_pool=2))
+    mf = run_mode(eps, engine, "bpaste", THOR, seed=7,
+                  max_concurrent_episodes=3, admission="fused")
+    mr = run_mode(eps, engine, "bpaste", THOR, seed=7,
+                  max_concurrent_episodes=3, admission="reference")
+    assert mf.makespan == pytest.approx(mr.makespan, rel=1e-9)
+    assert mf.reuses == mr.reuses
+    assert mf.memo_serves == mr.memo_serves
+    assert mf.memo_hits == mr.memo_hits
+
+
+# ======================================================================
+# Satellite: in-flight launch dedup
+# ======================================================================
+
+def test_inflight_dedup_subscribes_second_launch(engine):
+    """Two branches speculating the same (tool, args): the second must
+    subscribe to the first run instead of starting a twin job, and be fed
+    the result at publish."""
+    from tests.test_runtime import _manual_runtime, _mk_hyprun
+    rt, es = _manual_runtime(engine, [("grep", {"pattern": "x"}),
+                                      ("read", {"path": "p"})])
+    h1 = _mk_hyprun(rt, es, ["read"])
+    h2 = _mk_hyprun(rt, es, ["read"])
+    for hr in (h1, h2):
+        hr.node_runs[0].resolved_args = {"path": "pp"}
+        hr.meta_admitted = True
+    assert rt._start_spec_node(es, h1, 0)
+    assert h1.node_runs[0].status == "running"
+    started = rt._start_spec_node(es, h2, 0)
+    assert not started
+    assert h2.node_runs[0].waiting
+    assert h2.node_runs[0].status == "pending"
+    assert rt.metrics.memo_dedups == 1
+    n_spec_jobs = sum(1 for j in rt.sim.running.values() if j.speculative)
+    assert n_spec_jobs == 1                     # no twin job burning slack
+    while h1.node_runs[0].status == "running":  # drive to completion
+        assert rt.sim.step()
+    assert h1.node_runs[0].status == "done"
+    assert h2.node_runs[0].status == "done"     # fed by publish
+    assert not h2.node_runs[0].waiting
+    assert h2.node_runs[0].result == h1.node_runs[0].result
+    assert rt.metrics.memo_hits == 1
+
+
+def test_inflight_dedup_rearms_on_owner_abort(engine):
+    """If the owning job is squashed/preempted, subscribers are woken with
+    None and must be launchable again (no permanently-stuck waiters)."""
+    from tests.test_runtime import _manual_runtime, _mk_hyprun
+    rt, es = _manual_runtime(engine, [("grep", {"pattern": "x"}),
+                                      ("read", {"path": "p"})])
+    h1 = _mk_hyprun(rt, es, ["read"])
+    h2 = _mk_hyprun(rt, es, ["read"])
+    for hr in (h1, h2):
+        hr.node_runs[0].resolved_args = {"path": "pp"}
+        hr.meta_admitted = True
+    assert rt._start_spec_node(es, h1, 0)
+    assert not rt._start_spec_node(es, h2, 0)
+    rt._squash_one(es, h1)                      # owner dies
+    assert not h2.node_runs[0].waiting          # woken with None
+    assert rt._start_spec_node(es, h2, 0)       # re-arms and launches itself
+    assert h2.node_runs[0].status == "running"
+
+
+def test_spec_serve_into_sandbox(engine):
+    """A node whose (tool, args) is already memoized completes instantly in
+    the sandbox — no job, zero slack."""
+    from tests.test_runtime import _manual_runtime, _mk_hyprun
+    rt, es = _manual_runtime(engine, [("grep", {"pattern": "x"}),
+                                      ("read", {"path": "p"})])
+    rt.store.publish("read", {"path": "pp"}, {"path": "pp", "content": "c"},
+                     reads={}, writes={}, level=SafetyLevel.READ_ONLY,
+                     solo_work=0.8, eid=0)
+    hr = _mk_hyprun(rt, es, ["read"])
+    hr.node_runs[0].resolved_args = {"path": "pp"}
+    hr.meta_admitted = True
+    assert rt._start_spec_node(es, hr, 0)
+    nr = hr.node_runs[0]
+    assert nr.status == "done" and nr.served and nr.job is None
+    assert nr.result == {"path": "pp", "content": "c"}
+    assert rt.metrics.memo_hits == 1
+    assert not any(j.speculative for j in rt.sim.running.values())
