@@ -1,5 +1,6 @@
-"""Concurrent-episode serving sweep: the shared cross-episode beam and the
-cross-episode result store under multi-tenant load.
+"""Concurrent-episode serving sweep: the shared cross-episode beam, the
+cross-episode result store, and the batched model-step service under
+multi-tenant load.
 
 Grid: ``max_concurrent_episodes`` x mode (serial / paste / bpaste /
 bpaste+memo) on the shared-corpus serving workload (staggered tenant
@@ -14,15 +15,25 @@ Machine: PR 3 ran this sweep on the Thor edge box (accel=1), where c >= 4
 is ACCELERATOR-bound — eight concurrent model steps queue on one slot, so
 every scheduler converges on the model-step floor and no tool-level
 mechanism (speculative execution OR result serving) can move makespan.
-That regime is measured honestly in the ``thor_c8`` rows below; the grid
-itself runs on a serving box with 4 accelerator slots, where c=8 is
-genuinely work-saturated but TOOL-bound — the regime the result store
-exists for: execution speculation has no slack left, while cache-served
-commits still delete authoritative work.
+The grid itself runs on a serving box with 4 accelerator slots, where c=8
+is genuinely work-saturated but TOOL-bound — the regime the result store
+exists for.
 
-Headline rows: bpaste+memo at c=8 vs serial and vs plain bpaste — the
-memo row must buy makespan/sojourn at saturation without taxing
-authoritative work (mean_auth_slowdown <= 1.05, zero QoS violations).
+The ``thor_c8`` rows are PR 5's headline: the batched model-step service
+(``RuntimeConfig.model_max_batch``, model_service.py) coalesces concurrent
+episodes' reasoning steps into micro-batched model invocations, which is
+the only lever that can move an accel-bound box — it compresses the
+model-step queue itself and the reclaimed accelerator time becomes slack
+speculation can spend.  ``serial+batch`` isolates the infra win (batching
+alone); ``bpaste+memo+batch`` stacks speculation + the result store on the
+recovered slack.  The previously-converged cells (277.4 = 277.4 in PR 4)
+must SEPARATE: bpaste+memo+batch > serial+batch > serial = bpaste+memo,
+with ``mean_auth_slowdown <= 1.05`` and zero QoS violations per batch —
+batching never weakens the authoritative-protection invariant.
+
+``max_batch=1`` rows are the pinned baseline: the service's solo fast path
+is a synchronous pass-through, regression-tested bit-identical in
+tests/test_model_service.py.
 """
 from __future__ import annotations
 
@@ -39,16 +50,24 @@ from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episode
 SERVE_BOX = Machine(ResourceVector(cpu=12, mem_bw=100, io=500, accel=4))
 THOR_BOX = Machine()                      # PR 3's edge box (accel=1)
 
-# mode label -> (runtime mode, memo enabled).  NOTE: the runtime DEFAULT is
-# memo=True (the store is part of the shipped system, and every other bench
-# measures bpaste with it on); this grid's plain "paste"/"bpaste" rows
-# disable it explicitly so the "+memo" column isolates the store's
-# contribution — same scheduler, store off vs on.
+# micro-batch cap for the "+batch" rows; linger/marginal ride on the
+# RuntimeConfig defaults (1.5 s window, 0.3 marginal — see DESIGN.md)
+BATCH = 8
+
+# mode label -> (runtime mode, memo enabled, model_max_batch).  NOTE: the
+# runtime DEFAULT is memo=True (the store is part of the shipped system,
+# and every other bench measures bpaste with it on); this grid's plain
+# "paste"/"bpaste" rows disable it explicitly so the "+memo" column
+# isolates the store's contribution — same scheduler, store off vs on.
+# The "+batch" rows raise model_max_batch the same way: same scheduler and
+# store, batched vs serial model-step queue.
 MODES = {
-    "serial": ("serial", False),
-    "paste": ("paste", False),
-    "bpaste": ("bpaste", False),
-    "bpaste+memo": ("bpaste", True),
+    "serial": ("serial", False, 1),
+    "paste": ("paste", False, 1),
+    "bpaste": ("bpaste", False, 1),
+    "bpaste+memo": ("bpaste", True, 1),
+    "serial+batch": ("serial", False, BATCH),
+    "bpaste+memo+batch": ("bpaste", True, BATCH),
 }
 
 
@@ -59,15 +78,25 @@ def _fit_engine(n_train: int) -> PatternEngine:
 
 
 def _cell(test, engine, label: str, conc: int, machine) -> Dict:
-    mode, memo = MODES[label]
+    mode, memo, max_batch = MODES[label]
     m = run_mode(test, engine, mode, machine, seed=7,
-                 max_concurrent_episodes=conc, memo=memo)
+                 max_concurrent_episodes=conc, memo=memo,
+                 model_max_batch=max_batch)
     s = m.summary()
     return s
 
 
 def _row(name: str, s: Dict) -> Dict:
     trunc = " TRUNCATED" if s["truncated"] else ""
+    # batch-service columns whenever the batched path ran — gated on queue
+    # activity, not occupancy>=2, so an all-singleton batching run still
+    # shows the linger tax its tenants paid; max_batch=1 rows (no queue,
+    # no delay) stay textually identical to the pre-service bench
+    batch = ""
+    if (s.get("model_batched_steps", 0) > 0
+            or s.get("model_queue_delay_seconds", 0.0) > 0):
+        batch = (f" model_batch_occ={s['model_batch_occupancy']:.2f} "
+                 f"model_qdelay={s['mean_model_queue_delay']:.2f}")
     return {
         "name": name,
         "us_per_call": 0.0,
@@ -79,7 +108,7 @@ def _row(name: str, s: Dict) -> Dict:
                     f"memo_serves={s['memo_serves']:.0f} "
                     f"memo_saved={s['memo_saved_seconds']:.1f} "
                     f"worst_tenant_slowdown={s['worst_tenant_slowdown']:.3f}"
-                    f"{trunc}"),
+                    f"{batch}{trunc}"),
     }
 
 
@@ -103,6 +132,13 @@ def run(smoke: bool = False) -> List[Dict]:
     concurrencies = [1, 8] if smoke else [1, 2, 4, 8]
     labels = (["serial", "bpaste", "bpaste+memo"] if smoke
               else ["serial", "paste", "bpaste", "bpaste+memo"])
+    # PR 5 headline cells: the accel=1 edge box at c=8 — model-step-bound,
+    # converged for every tool-level mechanism (PR 3/4) — re-run with the
+    # model-step queue batched.  In the smoke tier too: these are the rows
+    # CI's bench-smoke artifact tracks for the separation regression.
+    thor_labels = (["serial", "bpaste+memo", "bpaste+memo+batch"] if smoke
+                   else ["serial", "serial+batch", "bpaste+memo",
+                         "bpaste+memo+batch"])
     engine = _fit_engine(n_train)
     test = make_episodes(WorkloadConfig(seed=42, n_episodes=n_test,
                                         arrival_stagger=4.0,
@@ -114,13 +150,11 @@ def run(smoke: bool = False) -> List[Dict]:
             s = _cell(test, engine, label, conc, SERVE_BOX)
             cells[(label, conc)] = s
             rows.append(_row(f"serving/{label}_c{conc}", s))
-    # the PR 3 edge box at c=8: accelerator-bound — modes converge and the
-    # store cannot help (documented honestly; the grid above is the regime
-    # the store targets)
-    if not smoke:
-        for label in ("serial", "bpaste", "bpaste+memo"):
-            s = _cell(test, engine, label, 8, THOR_BOX)
-            rows.append(_row(f"serving/thor_c8_{label}", s))
+    thor: Dict = {}
+    for label in thor_labels:
+        s = _cell(test, engine, label, 8, THOR_BOX)
+        thor[label] = s
+        rows.append(_row(f"serving/thor_c8_{label}", s))
     if ("bpaste+memo", 8) in cells and ("serial", 8) in cells:
         rows.append(_compare_row("serving/memo_c8_vs_serial_c8",
                                  cells[("serial", 8)],
@@ -133,4 +167,12 @@ def run(smoke: bool = False) -> List[Dict]:
         rows.append(_compare_row("serving/memo_c4_vs_serial_c4",
                                  cells[("serial", 4)],
                                  cells[("bpaste+memo", 4)]))
+    # the separation the batched model-step service buys on the edge box
+    if "bpaste+memo+batch" in thor and "serial" in thor:
+        rows.append(_compare_row("serving/thor_c8_batch_vs_serial",
+                                 thor["serial"], thor["bpaste+memo+batch"]))
+    if "bpaste+memo+batch" in thor and "serial+batch" in thor:
+        rows.append(_compare_row("serving/thor_c8_batch_vs_serial_batch",
+                                 thor["serial+batch"],
+                                 thor["bpaste+memo+batch"]))
     return rows

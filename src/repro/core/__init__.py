@@ -1,3 +1,12 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""B-PASTE core: the paper's system (scheduler, speculation, serving loop).
+
+Pipeline (each module's own docstring carries its paper anchor and
+neighbors; repo-level map in README.md):
+
+    mining/prefixspan -> patterns -> hypothesis -> scoring -> admission
+        -> runtime (phases 1-4) over simulator/interference,
+           with sandbox+executor (state), safety (policy),
+           memo (cross-episode result store),
+           model_service (batched model-step queue),
+           workload (episodes) and events (shared vocabulary).
+"""

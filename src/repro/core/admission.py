@@ -22,6 +22,11 @@ tests/test_admission_fused.py; the only dispatch-free implementation is
 ``_admit_numpy``, the small-beam fast path).  ``exact_admit`` enumerates
 all subsets (K ≤ ~14) and is used by tests to bound the greedy gap and by
 the benchmark to report solution quality.
+
+Paper anchor: Eq. 5–6 (admission under min(R_slack, B)), Algorithm 1
+line 20 (greedy re-scoring).  Upstream: scoring.py (shared estimators,
+PackedBeam), hypothesis.py (candidates).  Downstream: runtime Phase 4
+(``_admit_shared`` is the only production caller).
 """
 from __future__ import annotations
 
@@ -78,6 +83,7 @@ def greedy_admit(
     weights: Optional[np.ndarray] = None,
     memo_masks: Optional[np.ndarray] = None,
     memo_rho: Optional[np.ndarray] = None,
+    model_delay: float = 0.0,
 ) -> AdmissionResult:
     """Reference greedy: scoring dispatches (one per k_max chunk) + numpy
     re-pack PER admission iteration.  Semantics oracle for ``fused_admit``;
@@ -92,7 +98,10 @@ def greedy_admit(
     ``memo_masks`` (len(hyps), n_max) / ``memo_rho`` (len(hyps), R) carry
     the result-store reuse term (see scoring.static_gain_terms): memoized
     prefix nodes contribute EU at zero demand, so both the scoring AND the
-    capacity-fit check use the memo-excluded prefix ρ."""
+    capacity-fit check use the memo-excluded prefix ρ.
+
+    ``model_delay`` is the model-step service's expected queue+batch-window
+    delay, discounting every candidate's ΔU (scoring.static_gain_terms)."""
     limit = np.minimum(slack, budget)
     admitted: List[BranchHypothesis] = []
     admitted_demand = np.zeros(RESOURCE_DIMS)
@@ -111,6 +120,7 @@ def greedy_admit(
             remaining, authoritative_rho + admitted_demand, idle_window,
             memo_masks=None if memo_masks is None else memo_masks[rows],
             memo_rho=None if memo_rho is None else memo_rho[rows],
+            model_delay=model_delay,
         )
         if w_by_hid is not None:
             eu = eu * np.array([w_by_hid[h.hid] for h in remaining])
@@ -148,7 +158,8 @@ def bucket_k(n: int, k_max: int) -> int:
 @functools.partial(jax.jit, static_argnames=("n_nodes",))
 def admit_beam(
     node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid,
-    w, memo_mask, auth_rho, cap, limit, lam, mu, idle_window, n_nodes: int,
+    w, memo_mask, auth_rho, cap, limit, lam, mu, idle_window, model_delay,
+    n_nodes: int,
 ):
     """Entire greedy admission pass as ONE jitted kernel.
 
@@ -170,11 +181,16 @@ def admit_beam(
     the caller passes ``rho`` already excluding them — memoized nodes
     contribute EU at zero demand.
 
+    ``model_delay`` (traced scalar — it changes every tick without
+    recompiling, like the demand vectors) discounts every ΔU by the
+    model-step service's expected queue+batch-window delay; it is
+    loop-invariant, so it folds into the hoisted static terms.
+
     Returns (admitted_mask (K,), eu_at_admit (K,), admitted_demand (R,)).
     """
     l_solo, l_exec, delta_o, delta_u = static_gain_terms(
         node_lat, node_prob, node_mask, prefix_mask, adj, idle_window,
-        n_nodes, memo_mask=memo_mask,
+        n_nodes, memo_mask=memo_mask, model_delay=model_delay,
     )
     fit_lim = _fit_limit(limit)
     K = q.shape[0]
@@ -213,7 +229,7 @@ def admit_beam(
 
 def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
                  idle_window, w=None, memo_mask=None,
-                 rho=None) -> Tuple[np.ndarray, np.ndarray]:
+                 rho=None, model_delay=0.0) -> Tuple[np.ndarray, np.ndarray]:
     """The ``admit_beam`` algorithm on the same PackedBeam tables in pure
     numpy — the host-side fast path for tiny beams, where a single XLA
     dispatch (~1 ms on CPU) dwarfs the actual arithmetic.  The Eq. 3
@@ -230,7 +246,7 @@ def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
     K, N = lat.shape
     l_solo, l_exec, delta_o, delta_u = static_gain_terms(
         lat, prob, mask, pmask, adj, idle_window, N,
-        memo_mask=memo_mask, xp=np,
+        memo_mask=memo_mask, model_delay=model_delay, xp=np,
     )
 
     fit_lim = _fit_limit(limit)
@@ -269,6 +285,7 @@ def fused_admit(
     weights: Optional[np.ndarray] = None,
     memo_masks: Optional[np.ndarray] = None,
     memo_rho: Optional[np.ndarray] = None,
+    model_delay: float = 0.0,
 ) -> AdmissionResult:
     """Greedy admission via the fused ``admit_beam`` kernel: one XLA dispatch
     per admission pass (vs. one scoring dispatch per *iteration* in
@@ -282,7 +299,10 @@ def fused_admit(
     tables, so the PackedBeam cache stays valid as tenant shares move.
     ``memo_masks`` (len(hyps), n_max) / ``memo_rho`` (len(hyps), R) carry
     the result-store reuse term and ride alongside the pack for the same
-    reason (store contents change every tick; the pack does not)."""
+    reason (store contents change every tick; the pack does not).
+    ``model_delay`` (the model-step service's expected unlock delay) also
+    rides alongside — a traced scalar, so the jit cache is untouched as the
+    batch window moves."""
     if not len(hyps):
         return AdmissionResult([], {}, [])
     limit = np.minimum(slack, budget)
@@ -304,7 +324,7 @@ def fused_admit(
         admitted_mask, eu_adm = _admit_numpy(
             packed, np.asarray(authoritative_rho, float), cap,
             np.asarray(limit, float), scorer.lam, scorer.mu, idle_window,
-            w=w_pad, memo_mask=mm_pad, rho=rho,
+            w=w_pad, memo_mask=mm_pad, rho=rho, model_delay=model_delay,
         )
     else:
         admitted_mask, eu_adm, _ = admit_beam(
@@ -313,7 +333,7 @@ def fused_admit(
             jnp.asarray(w_pad), jnp.asarray(mm_pad),
             jnp.asarray(authoritative_rho),
             jnp.asarray(cap), jnp.asarray(limit), scorer.lam, scorer.mu,
-            idle_window, n_nodes=scorer.n_max,
+            idle_window, model_delay, n_nodes=scorer.n_max,
         )
         admitted_mask = np.asarray(admitted_mask)
         eu_adm = np.asarray(eu_adm)

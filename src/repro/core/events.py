@@ -5,6 +5,12 @@ level* control-flow patterns over **event signatures** — the (tool, arg
 schema) skeleton of an invocation, NOT its high-variance textual payload.
 B-PASTE mines short-horizon motifs over these signature streams and uses
 them to assemble branch hypotheses.
+
+Paper anchor: §3 (event signatures), §7 (SafetyLevel execution classes),
+Eq. 2/4 (ResourceVector ρ — per-tool multi-resource demand).
+Upstream: nothing (this is the shared vocabulary).  Downstream: everything
+— mining/patterns consume signatures, hypothesis/scoring consume ToolSpec
+ρ/latency, workload scripts episodes of Events, runtime executes them.
 """
 from __future__ import annotations
 

@@ -15,6 +15,12 @@ validity on exactly this footprint; the old whole-sandbox
 entries) and live ``_DictView`` reads were not tracked at all.  A read of a
 key the same call already wrote is a self-read — replay reproduces it — and
 is excluded from the footprint.
+
+Paper anchor: §4.2 (deterministic replayable tools — the Level-1/Level-2
+execution contract of §7).  Upstream: runtime.py (authoritative and
+speculative calls), workload.py (episode scripting uses the same
+semantics).  Downstream: sandbox.py views, memo.py (footprints key entry
+validity).
 """
 from __future__ import annotations
 
@@ -184,6 +190,11 @@ def execute_tool(tool: str, args: Dict[str, Any], state: StateFacade) -> Dict[st
         return {"pkg": pkg, "cached": True}
     if tool in ("session_init", "env_warmup"):
         state.E.set(f"warm:{tool}", True)
+        # live base mutation like every other env write: without the bump a
+        # pre-existing sandbox would keep validating (is_stale()==False)
+        # against a base that has diverged, and execution would disagree
+        # with cache-serving of the identical action (which does bump)
+        state.bump_if_live()
         return {"ok": True}
     if tool == "deploy":
         state.E.set("deployed", True)

@@ -17,6 +17,14 @@ drawn with merged context backoff), so no single root can monopolize
 ``assembly="chain"`` keeps the pre-tree behavior (each root expanded with
 its single most likely continuation into a linear chain) as a measured
 baseline for benchmarks/bench_beam.py.
+
+Paper anchor: Eq. 1 (hypothesis tuple), §4 (bounded local future
+subgraphs), §6.3 (safe prefix — here the frontier region
+``safe_prefix()``), §7 (PREP/BARRIER insertion per safety level).
+Upstream: patterns.py (root predictions, continuations, arg bindings),
+events.py (ToolSpec ρ/latency/levels).  Downstream: scoring.py packs
+beams of these into padded tables, admission.py admits them, runtime.py
+executes them as HypRun branches inside sandboxes.
 """
 from __future__ import annotations
 

@@ -13,6 +13,14 @@ This is the TPU/host-idiomatic replacement for the paper's (unspecified)
 Thor SoC measurement: it captures exactly the phenomenon the paper targets
 — co-location can raise aggregate throughput while delaying the critical
 branch.  Deterministic, differentiable, and vectorizable (scoring.py).
+
+Also home of the model-step batch-efficiency curve
+(``batched_step_latency``): the sublinear cost model the batched model-step
+service (model_service.py) charges per micro-batched invocation.
+
+Upstream: events.py (ResourceVector).  Downstream: simulator.py (job
+progress rates), scoring.py (ΔI), runtime Phase 2 (protection),
+model_service.py (batch latency).
 """
 from __future__ import annotations
 
@@ -55,6 +63,47 @@ def co_run_latency(
     solo: np.ndarray, demands: np.ndarray, cap: np.ndarray
 ) -> np.ndarray:
     return solo * slowdowns(demands, cap)
+
+
+def batched_step_latency(works: Sequence[float], marginal: float = 0.3) -> float:
+    """Latency of ONE batched model invocation serving ``b = len(works)``
+    coalesced reasoning steps (model_service.py).
+
+    Continuous-batching cost model, the ``base + marginal·(b−1)`` shape the
+    inference literature measures for decode batching (SPORK / Speculative
+    Actions exploit the same sublinearity on the model side): the longest
+    member sets the base — the batch is one forward pass per token, so it
+    cannot finish before its longest sequence — and every ADDITIONAL member
+    adds only ``marginal`` of its solo work (extra rows in the same matmuls
+    are close to free on a memory-bound accelerator, but KV traffic and
+    padding are not zero):
+
+        L(batch) = max_i w_i + marginal · (Σ_i w_i − max_i w_i)
+
+    Properties the scheduler relies on:
+      * b=1 is EXACT: ``L([w]) = w`` — a solo dispatch costs what the
+        unbatched runtime charged, which is what keeps ``max_batch=1``
+        bit-identical to the pre-service behavior.
+      * Sublinear but not free: serial cost Σw is reached only at
+        ``marginal=1``; ``marginal=0`` would be the (unphysical) free-batch
+        limit.  0 < marginal < 1 ⇒ batching strictly beats the serial queue
+        and strictly loses to a second accelerator.
+      * Monotone in every member's work and in batch size.
+    """
+    w = np.asarray(list(works), float)
+    if w.size == 0:
+        return 0.0
+    base = float(w.max())
+    return base + marginal * float(w.sum() - base)
+
+
+def batch_efficiency(b: int, marginal: float = 0.3) -> float:
+    """Per-step cost of a size-``b`` batch relative to serial execution, for
+    equal-work members: ``(1 + marginal·(b−1)) / b``.  The calibration curve
+    behind ``batched_step_latency`` — 1.0 at b=1, approaching ``marginal``
+    as b grows (an 8-wide batch at marginal=0.3 costs ~0.39 of serial)."""
+    b = max(int(b), 1)
+    return (1.0 + marginal * (b - 1)) / b
 
 
 def marginal_interference(

@@ -41,6 +41,15 @@ Pending entries (in-flight dedup)
 speculative launches ``subscribe`` instead of burning slack twice, and the
 first run's ``publish`` fires every subscriber with the finished entry
 (``abort`` fires them with ``None`` so waiters can re-arm).
+
+Paper anchor: the §4.2/§6 replayable-prefix reuse semantics, extended
+runtime-global (a validated speculated result is losslessly reusable —
+"Speculative Actions" / SPORK); safety gating follows §7 via
+``EligibilityPolicy.servable``.
+Upstream: executor.StateFacade (per-call read/write footprints),
+sandbox.py (state readers for validation).  Downstream: runtime.py
+(``_try_serve`` / ``_serve_spec`` / launch dedup), admission's EU reuse
+term (``memo_mask`` + memo-excluded prefix ρ in scoring.py).
 """
 from __future__ import annotations
 

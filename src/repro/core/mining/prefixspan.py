@@ -6,6 +6,10 @@ offline mining phase").  Items are hashable event signatures; sequences are
 per-request traces.  We mine *contiguous-gap-bounded* patterns: agent motifs
 like edit→test→read are near-adjacent, so a max_gap keeps patterns causal
 and the search bounded.
+
+Paper anchor: §3 (offline mining phase).  Upstream: events.py signature
+streams (via workload traces).  Downstream: patterns.py
+(``conditional_next`` feeds the conditional next-tool tables).
 """
 from __future__ import annotations
 

@@ -5,6 +5,12 @@ The context C is an event-signature suffix; T the predicted tool; f a
 simple transformations, per PASTE's data-flow regularity observation); p the
 empirical confidence.  B-PASTE uses these as building blocks for assembling
 bounded future subgraphs (hypothesis.py).
+
+Paper anchor: §3 (pattern tuples, data-flow regularities), Eq. 1's Φ (the
+late-bound argument resolvers hypotheses carry).
+Upstream: mining/prefixspan.py (motifs), events.py (signatures).
+Downstream: hypothesis.py (root prediction + tree expansion via
+``PatternEngine.predict_sigs``), runtime.py (miss-pruning predictions).
 """
 from __future__ import annotations
 

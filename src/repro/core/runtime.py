@@ -28,6 +28,15 @@ Modes:
                order, no EU/no preemption priority (the strawman §9 argues
                against)
   "serial"   — no speculation
+
+Paper anchor: Algorithm 1 (the phase loop), §5–6 (slack-only speculation,
+authoritative protection), Eq. 5 admission limit.
+Upstream: workload.py (episodes), patterns/hypothesis (beam supply),
+scoring/admission (EU + admitted set), safety.py (eligibility policy).
+Downstream: simulator.py (every job), sandbox/executor (state effects),
+memo.py (cache-served commits), model_service.py (the authoritative
+model-step queue — ``_start_model_step`` enqueues there; batches are
+authoritative jobs protected by Phase 2 like any other).
 """
 from __future__ import annotations
 
@@ -51,6 +60,7 @@ from repro.core.hypothesis import (
 )
 from repro.core.interference import Machine
 from repro.core.memo import MemoEntry, ResultStore, memo_key
+from repro.core.model_service import ModelStepRequest, ModelStepService
 from repro.core.patterns import PatternEngine
 from repro.core.safety import EligibilityPolicy, FULL_POLICY
 from repro.core.sandbox import AgentState, Sandbox
@@ -146,6 +156,20 @@ class RuntimeConfig:
                                   # SERVED to later identical invocations
                                   # (any tenant) instead of re-executed;
                                   # inert in mode="serial"
+    # batched model-step service (model_service.py): coalesce concurrent
+    # episodes' reasoning steps into micro-batched model invocations.
+    # max_batch=1 is the PINNED baseline — the service dispatches solo jobs
+    # synchronously and the runtime is bit-identical to the pre-service
+    # code, which every equivalence/regression test relies on.  Batching is
+    # the model-side lever for the accel-bound edge regime where the
+    # model-step queue (not tool work) is the bottleneck.
+    model_max_batch: int = 1
+    model_batch_linger: float = 1.5   # admission window (sim s) a forming
+                                      # batch stays open from its first
+                                      # member; the window is a latency tax
+                                      # on that member, so keep it short
+    model_batch_marginal: float = 0.3  # per-extra-member cost fraction of
+                                       # interference.batched_step_latency
 
 
 @dataclass
@@ -189,6 +213,19 @@ class Metrics:
     memo_entries: int = 0
     memo_saved_seconds: float = 0.0
     tenant_memo_saved: Dict[int, float] = field(default_factory=dict)
+    # batched model-step service (model_service.py): dispatched batch jobs,
+    # steps served in size>=2 batches vs solo dispatches, per-batch
+    # occupancy at dispatch, and the admission-window queue delay each
+    # request actually waited — attributed to the tenant that waited, so
+    # the linger tax can never hide inside a pooled mean (the batching
+    # analogue of per-tenant QoS attribution)
+    model_batches: int = 0
+    model_batched_steps: int = 0
+    model_solo_steps: int = 0
+    model_batch_occupancy_samples: List[int] = field(default_factory=list)
+    model_queue_delay_samples: List[float] = field(default_factory=list)
+    model_queue_delay_seconds: float = 0.0
+    tenant_model_queue_delay: Dict[int, float] = field(default_factory=dict)
     # occupied beam slots (active hypotheses, launchable or mid-flight,
     # summed over all active episodes) at each shared admission pass —
     # beam fullness against the per-episode beam_k slot cap, NOT the
@@ -251,6 +288,18 @@ class Metrics:
             "memo_invalidations": self.memo_invalidations,
             "memo_saved_seconds": self.memo_saved_seconds,
             "memo_serve_rate": self.memo_serves / max(self.auth_actions, 1),
+            "model_batches": self.model_batches,
+            "model_batched_steps": self.model_batched_steps,
+            "model_solo_steps": self.model_solo_steps,
+            "model_batch_occupancy": (
+                float(np.mean(self.model_batch_occupancy_samples))
+                if self.model_batch_occupancy_samples else 0.0
+            ),
+            "model_queue_delay_seconds": self.model_queue_delay_seconds,
+            "mean_model_queue_delay": (
+                float(np.mean(self.model_queue_delay_samples))
+                if self.model_queue_delay_samples else 0.0
+            ),
         }
 
     def per_tenant(self) -> Dict[int, Dict[str, float]]:
@@ -269,6 +318,7 @@ class Metrics:
                 ),
                 "qos_violations": float(self.tenant_qos_violations.get(eid, 0)),
                 "memo_saved": self.tenant_memo_saved.get(eid, 0.0),
+                "model_queue_delay": self.tenant_model_queue_delay.get(eid, 0.0),
             }
             for eid in sorted(eids)
         }
@@ -323,6 +373,14 @@ class BPasteRuntime:
         self._packed_sig: Optional[Tuple] = None
         self._arrival_timer: Optional[SimJob] = None
         self.sim = Simulator(machine, self._tick)
+        # batched model-step service: owns the model-step queue (the sole
+        # authoritative path on an accel-bound edge box).  max_batch=1 is a
+        # synchronous pass-through, bit-identical to spawning solo jobs here.
+        self.model_service = ModelStepService(
+            self.sim, tools["model_step"].rho.as_array(),
+            max_batch=rcfg.model_max_batch, linger=rcfg.model_batch_linger,
+            marginal=rcfg.model_batch_marginal, metrics=self.metrics,
+        )
 
     # ==================================================================
     def run(self) -> Metrics:
@@ -382,18 +440,21 @@ class BPasteRuntime:
     # episode driving (authoritative path)
     # ==================================================================
     def _start_model_step(self, es: EpisodeState):
+        """Enqueue the episode's next reasoning step into the model-step
+        service.  Under ``model_max_batch=1`` the service dispatches a solo
+        job synchronously (same name/demand/work as the pre-service code);
+        with batching on, the step may coalesce with other tenants' steps
+        into one micro-batched model invocation."""
         step = es.ep.steps[es.step_idx]
-        spec = self.tools["model_step"]
 
         def done(sim: Simulator, job: SimJob):
             self._on_reasoning_done(es)
 
-        job = self.sim.new_job(
-            f"model[e{es.ep.eid}.{es.step_idx}]", spec.rho.as_array(),
-            step.model_work, speculative=False, on_complete=done,
-            meta={"eid": es.ep.eid},
-        )
-        self.sim.start(job)
+        self.model_service.submit(ModelStepRequest(
+            eid=es.ep.eid, name=f"model[e{es.ep.eid}.{es.step_idx}]",
+            work=step.model_work, on_done=done,
+            batchable=getattr(step, "batchable", True),
+        ))
 
     def _on_reasoning_done(self, es: EpisodeState):
         step = es.ep.steps[es.step_idx]
@@ -535,6 +596,15 @@ class BPasteRuntime:
         return best[1], best[2], best[3]
 
     def _phase1(self):
+        """Confirm / promote (Algorithm 1 phase 1): match each episode's
+        pending authoritative action against its speculative beam.  A DONE
+        node is consumed at zero latency (commit the matched path, reuse the
+        result); a RUNNING node is promoted to authoritative — unless a
+        store entry can serve instantly, in which case the redundant run is
+        preempted; a ready PENDING node reuses its prefix state and is
+        served or executed from the boundary; a MISS settles its
+        consequences (contradiction squash, mis-speculation accounting),
+        then serves from the cross-episode store or re-executes."""
         for es in self.episodes:
             if es.phase != "acting" or es.pending_action is None:
                 continue
@@ -912,7 +982,7 @@ class BPasteRuntime:
             return
         need = np.sum([j.demand for j in auth_pending], axis=0)
         running_auth = self.sim.running_demand(speculative=False)
-        cap = self.machine.cap_array()
+        cap = self._cap
         spec_jobs = sorted(
             (j for j in self.sim.running.values() if j.speculative),
             key=lambda j: j.meta.get("eu", 0.0),
@@ -946,6 +1016,13 @@ class BPasteRuntime:
     # Phase 3: run authoritative jobs (primary policy: FIFO, always fits)
     # ==================================================================
     def _phase3(self):
+        """Run authoritative tool jobs (Algorithm 1 phase 3): drain each
+        episode's queue FIFO.  Authoritative work always starts — Phase 2
+        has already cleared any speculative oversubscription, and the
+        interference model stretches rather than blocks.  Model steps do
+        NOT pass through here: they are owned by the model-step service
+        (``_start_model_step`` → ``ModelStepService.submit``), which
+        dispatches solo or micro-batched authoritative jobs directly."""
         for es in self.episodes:
             while es.auth_queue:
                 job = es.auth_queue.pop(0)
@@ -1087,7 +1164,7 @@ class BPasteRuntime:
         eids = [es.ep.eid for es, _, _ in pool]
         if self.rcfg.fairness_alpha <= 0 or len(set(eids)) < 2:
             return None
-        cap = self.machine.cap_array()
+        cap = self._cap
         share: Dict[int, float] = {eid: 0.0 for eid in eids}
         for j in self.sim.running.values():
             if not j.speculative:
@@ -1190,6 +1267,11 @@ class BPasteRuntime:
             return
         weights = self._fairness_weights(pool)
         memo_masks, memo_rho = self._memo_terms(pool)
+        # model-step-service feedback: a branch's ΔU payoff (unlocking the
+        # next reasoning step early) is discounted by the expected wait that
+        # step would see in the batch admission window — 0.0 under the
+        # max_batch=1 baseline, keeping scoring bit-identical
+        model_delay = self.model_service.expected_unlock_delay()
         hyps = [hr.hyp for hr in cand]
         t0 = time.perf_counter()
         if self.rcfg.admission == "reference":
@@ -1197,6 +1279,7 @@ class BPasteRuntime:
                 hyps, self.scorer, slack, budget, auth_rho,
                 idle_window=self.rcfg.idle_window, weights=weights,
                 memo_masks=memo_masks, memo_rho=memo_rho,
+                model_delay=model_delay,
             )
         else:
             res = fused_admit(
@@ -1204,6 +1287,7 @@ class BPasteRuntime:
                 idle_window=self.rcfg.idle_window,
                 packed=self._packed_for(cand), weights=weights,
                 memo_masks=memo_masks, memo_rho=memo_rho,
+                model_delay=model_delay,
             )
         self.metrics.sched_admit_seconds += time.perf_counter() - t0
         self.metrics.sched_admit_calls += 1
@@ -1402,21 +1486,29 @@ class BPasteRuntime:
             auth = [j for j in dem if not j.speculative]
             if auth:
                 mat_all = np.stack([j.demand for j in dem])
-                slows_all = _sl(mat_all, self.machine.cap_array())
+                slows_all = _sl(mat_all, self._cap)
                 mat_auth = np.stack([j.demand for j in auth])
-                slows_auth = _sl(mat_auth, self.machine.cap_array())
+                slows_auth = _sl(mat_auth, self._cap)
                 auth_all = [(j, s) for j, s in zip(dem, slows_all)
                             if not j.speculative]
                 for (j, s_with), s_without in zip(auth_all, slows_auth):
                     ratio = float(s_with / max(s_without, 1e-9))
                     self.metrics.auth_slowdown_samples.append(ratio)
-                    eid = j.meta.get("eid")
-                    if eid is not None:
+                    # a batched model job serves SEVERAL tenants at once
+                    # (meta["eids"]): speculation stretching the batch taxes
+                    # every member, so the per-tenant slowdown sample and
+                    # any QoS violation land on each of them — per-batch
+                    # attribution, not first-member-only
+                    eids = j.meta.get("eids")
+                    if eids is None:
+                        eid = j.meta.get("eid")
+                        eids = [eid] if eid is not None else []
+                    for eid in eids:
                         self.metrics.tenant_slowdown_samples.setdefault(
                             eid, []).append(ratio)
                     if ratio > 1.05:
                         self.metrics.qos_violations += 1
-                        if eid is not None:
+                        for eid in eids:
                             self.metrics.tenant_qos_violations[eid] = (
                                 self.metrics.tenant_qos_violations.get(eid, 0)
                                 + 1)

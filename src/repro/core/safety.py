@@ -6,6 +6,11 @@ Level 2 staged-write) plus per-tool overrides and *transformed speculation*
 a dry-run/download-only variant).  By construction no speculative side
 effect becomes externally visible unless the authoritative path converges —
 commits require authoritative confirmation (sandbox.commit at promotion).
+
+Paper anchor: §7 (execution levels, operator policy), Eq. 1's σ.
+Upstream: events.py (ToolSpec default levels/transforms).  Downstream:
+runtime.py (speculative_form gating at beam build, ``servable`` gating of
+store serves), hypothesis.py (BARRIER insertion before Level-2 nodes).
 """
 from __future__ import annotations
 

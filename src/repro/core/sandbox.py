@@ -5,6 +5,12 @@ promotion.  Mis-speculation consumes bounded resources but never corrupts
 the live authoritative state.  Promotion (`commit`) merges the overlay into
 the base iff the base has not diverged under the sandbox (version check);
 `squash` drops everything.
+
+Paper anchor: Eq. 2 / §4.2 (sandbox tuple S, state-safety constraints σ).
+Upstream: runtime.py creates one Sandbox per admitted branch.
+Downstream: executor.py runs tools against the CoW views; memo.py
+validates store entries through them (``state_reader``) and uses the
+shared ABSENT marker for footprint reads.
 """
 from __future__ import annotations
 

@@ -19,6 +19,16 @@ concrete estimators, documented in DESIGN.md):
 
 The whole beam is scored in one jit call over padded (K, N) tables — the
 scheduler itself must not eat the slack it is trying to exploit.
+
+Three per-tick terms ride ALONGSIDE the packed tables (never inside them,
+so pack caches survive): tenant fairness weights, the result-store reuse
+term (memo masks + memo-excluded ρ), and the model-step service's
+queue-delay discount on ΔU (``model_delay``).
+
+Paper anchor: Eq. 3 (EU objective), Eq. 4 (ΔI interference term).
+Upstream: hypothesis.py (beams), interference.py (Machine/stretch model),
+model_service.py (expected unlock delay).  Downstream: admission.py
+(shares ``static_gain_terms``/``eu_given_admitted``), runtime Phase 4.
 """
 from __future__ import annotations
 
@@ -143,7 +153,8 @@ def _critical_path(adj, lat, mask, n_iters: int):
 
 
 def static_gain_terms(node_lat, node_prob, node_mask, prefix_mask, adj,
-                      idle_window, n_nodes: int, memo_mask=None, xp=jnp):
+                      idle_window, n_nodes: int, memo_mask=None,
+                      model_delay=0.0, xp=jnp):
     """Per-hypothesis terms independent of the admitted set: prefix solo
     latency, the prefix's EXECUTED latency, ΔO (idle-window-capped), and ΔU
     (post-prefix critical path).
@@ -154,6 +165,15 @@ def static_gain_terms(node_lat, node_prob, node_mask, prefix_mask, adj,
     but they need no execution, so they drop out of ``l_exec`` (the latency
     exposed to interference in ΔI) exactly as they drop out of the prefix ρ
     the caller passes alongside (``prefix_rho(h, exclude=...)``).
+
+    ``model_delay`` is the model-step service's expected queue+batch-window
+    delay (``ModelStepService.expected_unlock_delay``).  Every hypothesis's
+    post-prefix chain is headed by the terminal MODEL join — the next
+    reasoning boundary — so the downstream unlock cannot start earlier than
+    the batch admission window lets that model step start: a branch whose
+    unlock would land inside an already-forming batch is worth less
+    critical-path reduction, hence ``ΔU ← max(ΔU − model_delay, 0)``.
+    0 (the ``max_batch=1`` baseline) leaves ΔU bit-identical.
 
     Traceable helper shared by ``score_beam`` and the fused admission kernel
     — the latter hoists these out of its while_loop since only ΔI depends on
@@ -175,6 +195,7 @@ def static_gain_terms(node_lat, node_prob, node_mask, prefix_mask, adj,
                          axis=1)
             dist = np.maximum(dist, via * (post_mask > 0))
         delta_u = dist.max(axis=1)
+    delta_u = xp.maximum(delta_u - model_delay, 0.0)
     return l_solo, l_exec, delta_o, delta_u
 
 
@@ -208,17 +229,20 @@ def eu_given_admitted(l_exec, delta_o, delta_u, q, rho, k_valid,
 @functools.partial(jax.jit, static_argnames=("n_nodes",))
 def score_beam(
     node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid,
-    memo_mask, admitted_rho, cap, lam, mu, idle_window, n_nodes: int,
+    memo_mask, admitted_rho, cap, lam, mu, idle_window, model_delay,
+    n_nodes: int,
 ):
     """Vectorized EU for every hypothesis given the admitted demand.
 
     ``memo_mask`` (K, N) marks store-memoized prefix nodes (zero execution,
     zero interference exposure); ``rho`` must already exclude them.
+    ``model_delay`` discounts ΔU by the model-step service's expected
+    queue+batch-window delay (see ``static_gain_terms``).
 
     Returns (eu (K,), delta_o, delta_u, delta_i)."""
     l_solo, l_exec, delta_o, delta_u = static_gain_terms(
         node_lat, node_prob, node_mask, prefix_mask, adj, idle_window,
-        n_nodes, memo_mask=memo_mask,
+        n_nodes, memo_mask=memo_mask, model_delay=model_delay,
     )
     eu, delta_i = eu_given_admitted(
         l_exec, delta_o, delta_u, q, rho, k_valid, admitted_rho, cap,
@@ -265,12 +289,15 @@ class Scorer:
         idle_window: float = 10.0,
         memo_masks: Optional[np.ndarray] = None,
         memo_rho: Optional[np.ndarray] = None,
+        model_delay: float = 0.0,
     ) -> Tuple[np.ndarray, PackedBeam, dict]:
         """``memo_masks`` (len(hyps), N) / ``memo_rho`` (len(hyps), R) carry
         the store-reuse term: per-node memoized flags and the matching
         memo-excluded prefix demand.  They ride ALONGSIDE the packed tables
         (like fairness weights) — the PackedBeam stays store-agnostic, so
-        runtime pack caches remain valid as the store fills."""
+        runtime pack caches remain valid as the store fills.  ``model_delay``
+        is the model-step service's expected unlock delay (a traced scalar:
+        it changes every tick without recompiling)."""
         pb = pack_beam(hyps, self.k_max, self.n_max)
         K = pb.q.shape[0]
         mm = np.zeros((K, self.n_max))
@@ -284,7 +311,7 @@ class Scorer:
             pb.node_lat, pb.node_prob, pb.node_mask, pb.prefix_mask, pb.adj,
             pb.q, rho, pb.k_valid, jnp.asarray(mm),
             jnp.asarray(admitted_rho), jnp.asarray(self.machine.cap_array()),
-            self.lam, self.mu, idle_window, n_nodes=self.n_max,
+            self.lam, self.mu, idle_window, model_delay, n_nodes=self.n_max,
         )
         detail = {
             "delta_o": np.asarray(do), "delta_u": np.asarray(du),
@@ -299,6 +326,7 @@ class Scorer:
         idle_window: float = 10.0,
         memo_masks: Optional[np.ndarray] = None,
         memo_rho: Optional[np.ndarray] = None,
+        model_delay: float = 0.0,
     ) -> np.ndarray:
         """EU for EVERY hypothesis, chunked over ``k_max``-sized beams.
 
@@ -317,6 +345,7 @@ class Scorer:
                 else memo_masks[i:i + self.k_max],
                 memo_rho=None if memo_rho is None
                 else memo_rho[i:i + self.k_max],
+                model_delay=model_delay,
             )
             out.append(eu[: len(chunk)])
         return np.concatenate(out)

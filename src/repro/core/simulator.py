@@ -10,6 +10,11 @@ The runtime (runtime.py) plugs in as a `tick(sim)` callback invoked after
 every state change; preemption keeps remaining work so jobs resume without
 losing progress (paper §6: speculative work must be immediately
 preemptible and reclaimable).
+
+Paper anchor: §5–6 (slack, preemptibility), Eq. 4 via interference.py.
+Upstream: interference.Machine (capacities, slowdown model).  Downstream:
+runtime.py (every authoritative/speculative job and timer),
+model_service.py (batched model invocations + linger timers).
 """
 from __future__ import annotations
 
@@ -81,6 +86,17 @@ class Simulator:
         if job is not None:
             job.preempt_count += 1
             self.log.append((self.now, "preempt", job.name, job.jid, job.speculative))
+        return job
+
+    def cancel(self, jid: int) -> Optional[SimJob]:
+        """Remove a bookkeeping job (e.g. a batch-linger or arrival timer)
+        without the preemption bookkeeping: no preempt_count bump and no
+        "preempt" log line — cancelling a timer is not a scheduling decision
+        and must not read as one in the logs or waste accounting.  The job's
+        ``on_complete`` never fires."""
+        job = self.running.pop(jid, None)
+        if job is not None:
+            self.log.append((self.now, "cancel", job.name, job.jid, job.speculative))
         return job
 
     def running_demand(self, *, speculative: Optional[bool] = None) -> np.ndarray:

@@ -16,6 +16,13 @@ shares prefixes but diverges, so the mined conditional tables have fan-out
 >1 — the regime where tree-shaped hypotheses and multi-root beam fill pay
 off (and real ReAct traces live, per PASTE's characterization).  Set
 ``variation=0`` for the fully deterministic legacy streams.
+
+Paper anchor: §2/§8 (ReAct agent workloads, recurring motifs), §9's
+evaluation regimes (concurrency, staggered arrivals, shared corpora).
+Upstream: events.py tools, executor.py semantics (steps are scripted by
+actually executing them).  Downstream: runtime.py (episodes to serve),
+patterns.py (offline mining traces via ``episodes_to_traces``),
+model_service.py (per-step ``batchable`` metadata).
 """
 from __future__ import annotations
 
@@ -34,6 +41,12 @@ class Step:
     model_work: float            # reasoning latency preceding the action
     tool: str
     args: Dict[str, Any]
+    batchable: bool = True       # may this step's reasoning coalesce into a
+                                 # micro-batched model invocation
+                                 # (model_service.py)?  False pins the step
+                                 # to a solo dispatch — the escape hatch for
+                                 # latency-critical steps that must not pay
+                                 # the batch admission window (linger)
 
 
 @dataclass

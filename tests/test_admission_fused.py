@@ -515,3 +515,64 @@ def test_tree_prefix_mask_matches_safe_prefix():
         want = {n.idx for n in h.safe_prefix()}
         got = {i for i in range(12) if pb.prefix_mask[kk, i] > 0}
         assert got == want
+
+# ======================================================================
+# Model-step queue-delay term (ΔU discount from the batched model service)
+# ======================================================================
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("k", [3, 6])
+def test_model_delay_fused_matches_reference(seed, k):
+    """The ΔU queue-delay discount threads identically through the fused
+    kernel and the reference greedy."""
+    rng = np.random.default_rng(500 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_tree_hyp(h, rng) for h in range(k)]
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    delay = float(rng.uniform(0.5, 4.0))
+    ref = admission.greedy_admit(hyps, sc, slack, budget, auth,
+                                 model_delay=delay)
+    fus = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                model_delay=delay)
+    _assert_equivalent(ref, fus, hyps)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_model_delay_numpy_path_matches_kernel(seed):
+    rng = np.random.default_rng(600 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_tree_hyp(h, rng) for h in range(5)]
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    via_np = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                   model_delay=2.0,
+                                   small_beam_threshold=len(hyps))
+    via_krn = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                    model_delay=2.0, small_beam_threshold=0)
+    _assert_equivalent(via_np, via_krn, hyps)
+
+
+def test_model_delay_discounts_delta_u_monotonically():
+    """A growing batch-window delay strictly shrinks ΔU down to zero and
+    never touches ΔO; zero delay is bit-identical to the no-delay call."""
+    sc = scoring.Scorer(Machine())
+    # a tree hypothesis carries a post-prefix MODEL join, so delta_u > 0
+    rng = np.random.default_rng(3)
+    ht = _mk_tree_hyp(1, rng, q=0.8)
+    base, _, d0 = sc.score([ht], np.zeros(4), idle_window=8.0)
+    plain, _, _ = sc.score([ht], np.zeros(4), idle_window=8.0,
+                           model_delay=0.0)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(plain))
+    prev_du = d0["delta_u"][0]
+    assert prev_du > 0
+    for delay in (0.5, 1.5, 4.0, 1e3):
+        _, _, d = sc.score([ht], np.zeros(4), idle_window=8.0,
+                           model_delay=delay)
+        assert d["delta_u"][0] <= prev_du + 1e-6
+        np.testing.assert_allclose(d["delta_o"][0], d0["delta_o"][0],
+                                   rtol=1e-6)
+        prev_du = d["delta_u"][0]
+    assert prev_du == 0.0                    # huge delay exhausts the unlock

@@ -92,13 +92,17 @@ def test_facade_sandbox_footprint_tracks_per_call():
 
 
 # ======================================================================
-# Satellite: live-write version bumps (visit/fetch/pip_download)
+# Satellite: live-write version bumps (visit/fetch/pip_download + prep)
 # ======================================================================
 
 @pytest.mark.parametrize("tool,args", [
     ("visit", {"url": "u"}),
     ("fetch", {"url": "u"}),
     ("pip_download", {"pkg": "p"}),
+    # prep tools write E:warm:* into the live base; PREP_ONLY also dodges
+    # the runtime's level>=STAGED_WRITE bump, so the executor must bump
+    ("session_init", {}),
+    ("env_warmup", {}),
 ])
 def test_authoritative_live_write_bumps_version(tool, args):
     """Regression: these tools mutate the live base without bumping the

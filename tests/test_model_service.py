@@ -1,0 +1,300 @@
+"""Batched model-step service (model_service.py): batch-window edge cases,
+``max_batch=1`` bit-identity against the pre-service runtime, queue-delay
+QoS attribution, and the batched edge-regime separation."""
+import numpy as np
+import pytest
+
+from repro.core.events import DEFAULT_TOOLS, ResourceVector
+from repro.core.interference import (
+    Machine, batch_efficiency, batched_step_latency,
+)
+from repro.core.model_service import ModelStepRequest, ModelStepService
+from repro.core.patterns import PatternEngine
+from repro.core.runtime import Metrics, run_mode
+from repro.core.simulator import Simulator
+from repro.core.workload import (
+    WorkloadConfig, episodes_to_traces, make_episodes,
+)
+
+MODEL_RHO = DEFAULT_TOOLS["model_step"].rho.as_array()
+THOR = Machine()                            # accel=1 edge box
+SERVE = Machine(ResourceVector(cpu=12, mem_bw=100, io=500, accel=4))
+
+
+# ----------------------------------------------------------------------
+# batch latency model (interference.batched_step_latency)
+# ----------------------------------------------------------------------
+def test_singleton_batch_latency_is_exact():
+    """b=1 must cost exactly the solo work — the property that keeps
+    max_batch=1 bit-identical to the pre-service runtime."""
+    assert batched_step_latency([2.5]) == 2.5
+    assert batched_step_latency([0.7], marginal=0.9) == 0.7
+
+
+def test_batch_latency_sublinear_but_not_free():
+    works = [2.0, 3.0, 2.5, 1.5]
+    lat = batched_step_latency(works, marginal=0.3)
+    assert lat < sum(works)                 # strictly beats the serial queue
+    assert lat > max(works)                 # but is not free
+    np.testing.assert_allclose(lat, 3.0 + 0.3 * 6.0)
+
+
+def test_batch_latency_monotone_in_members():
+    base = batched_step_latency([2.0, 2.0], marginal=0.3)
+    assert batched_step_latency([2.0, 2.0, 2.0], marginal=0.3) > base
+    assert batched_step_latency([2.0, 4.0], marginal=0.3) > base
+    assert batched_step_latency([], marginal=0.3) == 0.0
+
+
+def test_batch_efficiency_curve():
+    assert batch_efficiency(1) == 1.0
+    # per-step cost falls toward the marginal fraction as b grows
+    assert batch_efficiency(8, 0.3) < batch_efficiency(2, 0.3) < 1.0
+    np.testing.assert_allclose(batch_efficiency(8, 0.3), (1 + 0.3 * 7) / 8)
+
+
+# ----------------------------------------------------------------------
+# batch-window mechanics (service driven directly on a bare simulator)
+# ----------------------------------------------------------------------
+def _bare_service(**kw):
+    sim = Simulator(THOR, lambda s: None)
+    m = Metrics()
+    svc = ModelStepService(sim, MODEL_RHO, metrics=m, **kw)
+    return sim, svc, m
+
+
+def test_linger_expiry_with_single_request():
+    """A lone request must not wait forever: the linger window expires and
+    dispatches a singleton batch, completing at linger + work."""
+    sim, svc, m = _bare_service(max_batch=4, linger=1.0)
+    fired = []
+    svc.submit(ModelStepRequest(0, "model[e0.0]", 2.5,
+                                lambda s, j: fired.append(s.now)))
+    assert svc.forming_size == 1
+    sim.run()
+    assert fired and np.isclose(fired[0], 1.0 + 2.5)
+    assert m.model_batches == 1 and m.model_solo_steps == 1
+    assert m.model_batch_occupancy_samples == [1]
+    np.testing.assert_allclose(m.tenant_model_queue_delay[0], 1.0)
+
+
+def test_batch_forms_across_tenants():
+    """Two tenants' steps inside one linger window coalesce into ONE
+    simulator job tagged with both eids, and both continuations fire."""
+    sim, svc, m = _bare_service(max_batch=4, linger=2.0)
+    fired = {}
+    svc.submit(ModelStepRequest(0, "model[e0.0]", 2.0,
+                                lambda s, j, e=0: fired.setdefault(e, s.now)))
+    svc.submit(ModelStepRequest(1, "model[e1.0]", 3.0,
+                                lambda s, j, e=1: fired.setdefault(e, s.now)))
+    sim.run()
+    assert set(fired) == {0, 1}
+    assert m.model_batches == 1 and m.model_batched_steps == 2
+    assert m.model_batch_occupancy_samples == [2]
+    # ONE batch job (plus the linger timer) ran; it carried both eids
+    batch_log = [r for r in sim.log if r[1] == "finish"
+                 and r[2].startswith("model_batch[")]
+    assert len(batch_log) == 1
+    done_t = 2.0 + batched_step_latency([2.0, 3.0], svc.marginal)
+    np.testing.assert_allclose(fired[0], done_t)
+    np.testing.assert_allclose(fired[1], done_t)
+
+
+def test_full_batch_dispatches_before_linger_expiry():
+    """Reaching max_batch cancels the linger timer and dispatches NOW — a
+    full batch must not keep paying the admission window."""
+    sim, svc, m = _bare_service(max_batch=2, linger=50.0)
+    fired = []
+    svc.submit(ModelStepRequest(0, "model[e0.0]", 2.0,
+                                lambda s, j: fired.append(s.now)))
+    svc.submit(ModelStepRequest(1, "model[e1.0]", 2.0,
+                                lambda s, j: fired.append(s.now)))
+    assert svc.forming_size == 0            # dispatched on fill
+    sim.run()
+    assert fired and fired[0] < 50.0        # did NOT wait out the linger
+    np.testing.assert_allclose(
+        fired[0], batched_step_latency([2.0, 2.0], svc.marginal))
+    # the cancelled timer is logged as "cancel", never as "preempt"
+    assert any(r[1] == "cancel" for r in sim.log)
+    assert not any(r[1] == "preempt" for r in sim.log)
+
+
+def test_non_batchable_request_dispatches_solo():
+    """Step.batchable=False pins the step to a solo dispatch even while a
+    batch is forming (latency-critical steps skip the admission window)."""
+    sim, svc, m = _bare_service(max_batch=4, linger=5.0)
+    fired = {}
+    svc.submit(ModelStepRequest(0, "model[e0.0]", 2.0,
+                                lambda s, j, e=0: fired.setdefault(e, s.now)))
+    svc.submit(ModelStepRequest(1, "model[e1.0]", 2.0,
+                                lambda s, j, e=1: fired.setdefault(e, s.now),
+                                batchable=False))
+    assert svc.forming_size == 1            # the solo one bypassed the queue
+    sim.run()
+    # the non-batchable step never waited: zero queue delay attributed
+    assert 1 not in m.tenant_model_queue_delay
+    assert m.model_solo_steps == 2          # solo dispatch + expired singleton
+
+
+def test_queue_delay_attributed_to_the_tenant_that_waited():
+    """The window-opening tenant pays (nearly) the whole linger; a late
+    joiner pays only the remainder — per-tenant, never pooled."""
+    sim, svc, m = _bare_service(max_batch=4, linger=3.0)
+    svc.submit(ModelStepRequest(7, "model[e7.0]", 2.0, lambda s, j: None))
+    # advance the clock 1s with an unrelated job, then tenant 9 joins
+    filler = sim.new_job("filler", np.zeros(4), 1.0, speculative=False)
+    sim.start(filler)
+    sim.step()
+    assert sim.now == 1.0
+    svc.submit(ModelStepRequest(9, "model[e9.0]", 2.0, lambda s, j: None))
+    sim.run()
+    np.testing.assert_allclose(m.tenant_model_queue_delay[7], 3.0)
+    np.testing.assert_allclose(m.tenant_model_queue_delay[9], 2.0)
+    np.testing.assert_allclose(m.model_queue_delay_seconds, 5.0)
+
+
+def test_expected_unlock_delay():
+    """0 under the pinned baseline; a full window when idle with batching
+    on; the REMAINING window while a batch is forming."""
+    sim0, svc0, _ = _bare_service(max_batch=1, linger=2.0)
+    assert svc0.expected_unlock_delay() == 0.0
+    sim, svc, _ = _bare_service(max_batch=4, linger=2.0)
+    assert svc.expected_unlock_delay() == 2.0          # would open a window
+    svc.submit(ModelStepRequest(0, "model[e0.0]", 2.0, lambda s, j: None))
+    np.testing.assert_allclose(svc.expected_unlock_delay(), 2.0)
+    filler = sim.new_job("filler", np.zeros(4), 0.5, speculative=False)
+    sim.start(filler)
+    sim.step()
+    np.testing.assert_allclose(svc.expected_unlock_delay(), 1.5)
+
+
+def test_service_rejects_bad_config():
+    sim = Simulator(THOR, lambda s: None)
+    with pytest.raises(ValueError):
+        ModelStepService(sim, MODEL_RHO, max_batch=0)
+    with pytest.raises(ValueError):
+        ModelStepService(sim, MODEL_RHO, linger=-1.0)
+
+
+# ----------------------------------------------------------------------
+# runtime integration: bit-identity and the edge-regime separation
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def serving_setup():
+    train = make_episodes(WorkloadConfig(seed=1, n_episodes=20))
+    engine = PatternEngine(context_len=2, min_support=3).fit(
+        episodes_to_traces(train))
+    test = make_episodes(WorkloadConfig(seed=42, n_episodes=8,
+                                        arrival_stagger=4.0,
+                                        shared_frac=0.5, shared_pool=2))
+    return engine, test
+
+
+# summaries of the PRE-SERVICE runtime (captured at PR-4 HEAD d7ac806 on
+# exactly the serving_setup configuration): model_max_batch=1 must
+# reproduce them bit-for-bit — the service's solo fast path is a
+# synchronous pass-through, so ANY drift here is a regression
+_PINNED = {
+    ("serial", False, 8, "thor"): {
+        "makespan": 158.642488348, "mean_latency": 124.4674555425,
+        "p95_sojourn": 149.2761862243, "worst_tenant_latency": 154.5503378327,
+        "promotions": 0, "reuses": 0, "memo_serves": 0,
+    },
+    ("bpaste", True, 8, "thor"): {
+        "makespan": 148.6440524884, "mean_latency": 115.6193011231,
+        "p95_sojourn": 141.1002291033, "promotions": 2, "reuses": 28,
+        "prefix_reuses": 34, "memo_serves": 5, "memo_hits": 39,
+        "memo_dedups": 10, "spec_solo_seconds": 149.1987885892,
+        "wasted_frac": 0.4491430528, "beam_occupancy": 21.5887850467,
+    },
+    ("bpaste", True, 8, "serve"): {
+        "makespan": 49.9548251308, "mean_latency": 34.217733166,
+        "p95_sojourn": 43.9043222271, "promotions": 10, "reuses": 15,
+        "prefix_reuses": 30, "memo_serves": 4, "memo_hits": 42,
+        "memo_dedups": 21, "spec_solo_seconds": 142.2316664026,
+        "wasted_frac": 0.4757485715,
+    },
+    ("serial", False, 1, "serve"): {
+        "makespan": 336.2090035222, "p95_sojourn": 310.2519340599,
+        "worst_tenant_sojourn": 323.0032584244,
+    },
+}
+
+
+@pytest.mark.parametrize("mode,memo,conc,box", list(_PINNED))
+def test_max_batch_one_bit_identical_to_pre_service_runtime(
+        serving_setup, mode, memo, conc, box):
+    engine, test = serving_setup
+    machine = THOR if box == "thor" else SERVE
+    m = run_mode(test, engine, mode, machine, seed=7,
+                 max_concurrent_episodes=conc, memo=memo, model_max_batch=1)
+    s = m.summary()
+    for key, want in _PINNED[(mode, memo, conc, box)].items():
+        np.testing.assert_allclose(s[key], want, rtol=1e-8, err_msg=key)
+    # and the service never batched, lingered, or delayed anything
+    assert s["model_batches"] == s["model_solo_steps"]
+    assert s["model_batched_steps"] == 0
+    assert s["model_queue_delay_seconds"] == 0.0
+
+
+def test_batching_separates_the_edge_regime(serving_setup):
+    """The acceptance headline at test scale: on the accel=1 Thor box at
+    c=8 — where PR 3/4 measured every mode converged on the model-step
+    floor — batching the model-step queue separates the modes again:
+    bpaste+memo+batch beats serial (and serial+batch) on makespan while
+    holding the authoritative-protection invariant."""
+    engine, test = serving_setup
+    serial = run_mode(test, engine, "serial", THOR, seed=7,
+                      max_concurrent_episodes=8).summary()
+    serial_b = run_mode(test, engine, "serial", THOR, seed=7,
+                        max_concurrent_episodes=8,
+                        model_max_batch=8).summary()
+    full = run_mode(test, engine, "bpaste", THOR, seed=7,
+                    max_concurrent_episodes=8, memo=True,
+                    model_max_batch=8).summary()
+    assert full["makespan"] < serial["makespan"]
+    assert full["makespan"] < serial_b["makespan"]
+    assert full["mean_auth_slowdown"] <= 1.05
+    assert full["qos_violations"] == 0
+    assert full["worst_tenant_slowdown"] <= 1.05
+    assert full["model_batched_steps"] > 0
+    assert full["model_batch_occupancy"] > 1.0
+
+
+def test_batch_queue_delay_attributed_per_tenant_in_runtime(serving_setup):
+    """End-to-end QoS attribution: with batching on, the linger waits land
+    in per-tenant buckets that sum to the pooled total."""
+    engine, test = serving_setup
+    m = run_mode(test, engine, "serial", THOR, seed=7,
+                 max_concurrent_episodes=8, model_max_batch=8)
+    assert m.model_queue_delay_seconds > 0
+    np.testing.assert_allclose(
+        sum(m.tenant_model_queue_delay.values()),
+        m.model_queue_delay_seconds)
+    # every delayed tenant is a real episode id
+    eids = {ep.eid for ep in test}
+    assert set(m.tenant_model_queue_delay) <= eids
+    # per_tenant() surfaces the attribution
+    pt = m.per_tenant()
+    for eid, d in m.tenant_model_queue_delay.items():
+        np.testing.assert_allclose(pt[eid]["model_queue_delay"], d)
+
+
+def test_non_batchable_steps_dispatch_solo_in_runtime(serving_setup):
+    """Workload batchable-step metadata reaches the service through the
+    runtime: marking every step non-batchable disables coalescing even
+    with batching configured on."""
+    engine, test = serving_setup
+    import copy
+    pinned = copy.deepcopy(test)
+    for ep in pinned:
+        for st in ep.steps:
+            st.batchable = False
+    m = run_mode(pinned, engine, "serial", THOR, seed=7,
+                 max_concurrent_episodes=8, model_max_batch=8)
+    assert m.model_batched_steps == 0
+    assert m.model_queue_delay_seconds == 0.0
+    # and the run is identical to the unbatched baseline
+    base = run_mode(test, engine, "serial", THOR, seed=7,
+                    max_concurrent_episodes=8, model_max_batch=1)
+    np.testing.assert_allclose(m.makespan, base.makespan, rtol=1e-12)
