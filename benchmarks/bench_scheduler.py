@@ -1,6 +1,7 @@
 """Scheduler microbenchmarks: the runtime must not eat the slack it
 exploits.  Beam EU scoring (jit), greedy admission, greedy-vs-exact
-quality, PrefixSpan mining throughput."""
+quality, PrefixSpan mining throughput, and the tenant-scale tick-loop
+sweep (event vs dense scheduler at c∈{8,64,256,1024})."""
 from __future__ import annotations
 
 import time
@@ -14,7 +15,18 @@ from repro.core.hypothesis import BranchHypothesis, HypothesisBuilder, Node, Nod
 from repro.core.interference import Machine
 from repro.core.mining.prefixspan import prefixspan
 from repro.core.patterns import PatternEngine
+from repro.core.runtime import run_mode
 from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episodes
+
+# scheduler overhead budget, µs of wall time per tick per episode: the
+# control loop must stay a rounding error next to the second-scale tool
+# work it schedules.  check_budget.py flags >2x regressions vs the
+# checked-in baseline; this constant is the absolute sanity line.
+TICK_BUDGET_US = 50.0
+
+# dense is O(c) per tick — at c=1024 a single run takes minutes of pure
+# Python scanning, which is exactly the point; measure it only up to here
+DENSE_C_MAX = 256
 
 
 def _mk_hyp(hid, tools, q=0.8):
@@ -27,7 +39,39 @@ def _mk_hyp(hid, tools, q=0.8):
     return BranchHypothesis(hid, nodes, edges, q, context_key=("x",))
 
 
-def run() -> List[Dict]:
+def _sweep_cell(c: int, scheduler: str, engine: PatternEngine) -> Dict:
+    """One synthetic-tenant serving cell: c staggered episodes on a serve
+    box, event or dense scheduler, log recording off (the c=1024 event log
+    is a memory blowup — satellite knob record_log=False).  Returns the
+    µs/tick/episode overhead row."""
+    from repro.core.events import ResourceVector
+    from repro.core.interference import Machine as _Machine
+
+    eps = make_episodes(WorkloadConfig(seed=11, n_episodes=c,
+                                       arrival_stagger=0.5,
+                                       shared_frac=0.5, shared_pool=4))
+    box = _Machine(ResourceVector(cpu=24, mem_bw=200, io=1000, accel=8))
+    t0 = time.perf_counter()
+    m = run_mode(eps, engine, "bpaste", box, seed=7,
+                 max_concurrent_episodes=c, scheduler=scheduler,
+                 record_log=False, model_max_batch=8)
+    wall = time.perf_counter() - t0
+    s = m.summary()
+    us_per_tick_ep = s["sched_us_per_tick"] / max(c, 1)
+    return {
+        "name": f"scheduler/tick_sweep_{scheduler}_c{c}",
+        "us_per_call": us_per_tick_ep,
+        "derived": (f"us/tick/episode (ticks={int(s['sched_ticks'])}, "
+                    f"makespan={s['makespan']:.1f}s, wall={wall:.1f}s, "
+                    f"budget={TICK_BUDGET_US}us)"),
+        "c": c, "scheduler": scheduler,
+        "us_per_tick": s["sched_us_per_tick"],
+        "ticks": int(s["sched_ticks"]),
+        "wall_seconds": wall,
+    }
+
+
+def run(smoke: bool = False) -> List[Dict]:
     rows = []
     sc = scoring.Scorer(Machine(), k_max=8, n_max=12)
     hyps = [_mk_hyp(i, ["grep", "read", "parse", "search"][: 1 + i % 4], q=0.9 - 0.1 * i)
@@ -91,4 +135,32 @@ def run() -> List[Dict]:
     dt = (time.perf_counter() - t0) / 100
     rows.append({"name": "scheduler/build_beam", "us_per_call": dt * 1e6,
                  "derived": f"hyps={len(hs)}"})
+
+    # ---- tenant-scale tick-loop sweep (event vs dense) ----------------
+    # smoke keeps CI cheap (c<=64); the full sweep is the ISSUE-6
+    # acceptance artifact: event >=5x cheaper than dense at c=256, all
+    # four c rows reported against TICK_BUDGET_US
+    sweep_cs = [8, 64] if smoke else [8, 64, 256, 1024]
+    for c in sweep_cs:
+        for scheduler in ("event", "dense"):
+            if scheduler == "dense" and c > DENSE_C_MAX:
+                rows.append({
+                    "name": f"scheduler/tick_sweep_dense_c{c}",
+                    "us_per_call": 0.0,
+                    "derived": f"skipped (dense O(c) loop; measured up to "
+                               f"c={DENSE_C_MAX})",
+                    "c": c, "scheduler": "dense", "skipped": True,
+                })
+                continue
+            rows.append(_sweep_cell(c, scheduler, pe))
+    ev = {r["c"]: r for r in rows if r.get("scheduler") == "event"}
+    de = {r["c"]: r for r in rows
+          if r.get("scheduler") == "dense" and not r.get("skipped")}
+    for c in sorted(set(ev) & set(de)):
+        speedup = de[c]["us_per_call"] / max(ev[c]["us_per_call"], 1e-9)
+        rows.append({"name": f"scheduler/tick_sweep_speedup_c{c}",
+                     "us_per_call": 0.0,
+                     "derived": f"event_vs_dense={speedup:.1f}x "
+                                f"(us/tick/episode)",
+                     "c": c, "speedup": speedup})
     return rows

@@ -31,7 +31,8 @@ def main() -> None:
 
     if args.smoke:
         sections = [
-            ("scheduler (runtime overhead)", bench_scheduler.run),
+            ("scheduler (runtime overhead)",
+             lambda: bench_scheduler.run(smoke=True)),
             ("admission (fused vs reference)",
              lambda: bench_admission.run(smoke=True)),
             ("beam (tree assembly occupancy/reuse)",

@@ -1,0 +1,78 @@
+"""Per-episode Gantt timeline of one seeded c=8 serving cell.
+
+  PYTHONPATH=src python examples/trace_timeline.py [--out trace.json]
+
+Runs the event-driven B-PASTE runtime over 8 staggered tenants on an
+edge box with a :class:`repro.core.trace.GanttRecorder` attached, dumps
+the timeline as JSON rows (job, tenant(s), t_start/t_end, speculative,
+batch id, outcome) and renders a seconds-scale ASCII Gantt — the
+observability path for debugging schedules where per-job print logging
+stops being readable (the c=1024 regime the event scheduler exists for,
+demonstrated here at readable scale).
+
+Reading the chart: ``=`` segments are authoritative work (model steps,
+batched model invocations carry a ``b<seq>`` batch tag, tools), ``~``
+segments are speculative branch nodes running inside sandboxes, ``x``
+marks a preemption (Phase-2 protection or a squash killed the segment).
+
+CI runs this in the fast tier like speculative_serving.py.
+"""
+import argparse
+import json
+import os
+import tempfile
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the Gantt JSON here (default: temp file)")
+    ap.add_argument("--episodes", type=int, default=8)
+    args = ap.parse_args()
+
+    from repro.core.interference import Machine
+    from repro.core.patterns import PatternEngine
+    from repro.core.runtime import BPasteRuntime, RuntimeConfig
+    from repro.core.trace import GanttRecorder, render_ascii
+    from repro.core.workload import (
+        WorkloadConfig, episodes_to_traces, make_episodes,
+    )
+
+    train = make_episodes(WorkloadConfig(seed=1, n_episodes=20))
+    engine = PatternEngine(context_len=2, min_support=3).fit(
+        episodes_to_traces(train))
+    tenants = make_episodes(WorkloadConfig(
+        seed=42, n_episodes=args.episodes, arrival_stagger=4.0,
+        shared_frac=0.5, shared_pool=2))
+
+    rec = GanttRecorder()
+    rt = BPasteRuntime(tenants, engine, Machine(), rcfg=RuntimeConfig(
+        mode="bpaste", seed=7, max_concurrent_episodes=args.episodes,
+        model_max_batch=8, trace=rec))
+    m = rt.run()
+    rec.close(rt.sim.now)
+
+    out = args.out or os.path.join(tempfile.gettempdir(), "trace_timeline.json")
+    rec.dump(out)
+    s = m.summary()
+    spec_rows = sum(1 for r in rec.rows if r["speculative"])
+    batch_rows = sum(1 for r in rec.rows if r["batch"] is not None)
+    print(f"{len(rec.rows)} timeline rows ({spec_rows} speculative, "
+          f"{batch_rows} batched model invocations) -> {out}")
+    print(f"makespan={s['makespan']:.1f}s  reuses={s['reuses']:.0f}  "
+          f"promotions={s['promotions']:.0f}  "
+          f"sched_us_per_tick={s['sched_us_per_tick']:.0f}")
+    print()
+    print(render_ascii(rec.rows))
+
+    # sanity for CI: the dump is valid JSON with the documented fields
+    with open(out) as f:
+        rows = json.load(f)
+    assert rows and all(
+        {"job", "tenant", "t_start", "t_end", "speculative", "batch"}
+        <= set(r) for r in rows)
+    assert any(r["speculative"] for r in rows), "no speculation recorded"
+
+
+if __name__ == "__main__":
+    main()

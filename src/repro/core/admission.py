@@ -148,11 +148,22 @@ def greedy_admit(
 
 
 def bucket_k(n: int, k_max: int) -> int:
-    """Smallest multiple of k_max holding n hypotheses (≥ k_max).
+    """Smallest bucket ≥ n hypotheses: multiples of k_max up to 2·k_max,
+    then GEOMETRIC (k_max · 2^j) above.
 
     Bucketing keeps the fused kernel's compiled-shape set bounded while
-    never dropping candidates: a 12-wide beam with k_max=8 packs at K=16."""
-    return max(k_max, k_max * math.ceil(n / max(k_max, 1)))
+    never dropping candidates (padded rows carry k_valid=0 and are inert):
+    a 12-wide beam with k_max=8 packs at K=16.  Geometric growth matters
+    under c≫1 tenants, where the pooled beam width moves every tick —
+    linear buckets gave one XLA compile per multiple (each ~100s of ms,
+    paid inside the tick loop), log₂ buckets cap the shape set."""
+    km = max(k_max, 1)
+    if n <= 2 * km:
+        return max(km, km * math.ceil(n / km))
+    b = 2 * km
+    while b < n:
+        b *= 2
+    return b
 
 
 @functools.partial(jax.jit, static_argnames=("n_nodes",))
@@ -244,33 +255,93 @@ def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
     if rho is None:
         rho = packed.rho
     K, N = lat.shape
+    rho = np.asarray(rho, float)
+    auth_rho = np.asarray(auth_rho, float)
+    cap = np.asarray(cap, float)
+    fit_lim = _fit_limit(limit)
+    if w is None:
+        w = np.ones(K)
+    admitted = np.zeros(K)
+    eu_adm = np.zeros(K)
+    # Rows that can never be admitted are dropped before any scoring:
+    # padding / invalid rows (k_valid 0 → eu 0, never > 0) and rows whose
+    # prefix demand alone exceeds the limit (the admitted demand only
+    # GROWS, so an initial non-fit stays a non-fit).  Every per-row term
+    # below is independent of the other rows, so compaction changes no
+    # value and — because np.argmax keeps first-index tie-breaks and
+    # compaction preserves order — no decision.
+    act = np.flatnonzero((k_valid > 0)
+                         & np.all(rho <= fit_lim[None, :], axis=1))
+    if not len(act):
+        return admitted, eu_adm
+    lat, prob, mask, pmask, adj = (
+        lat[act], prob[act], mask[act], pmask[act], adj[act])
+    q, k_valid, rho, w = q[act], k_valid[act], rho[act], w[act]
+    if memo_mask is not None:
+        memo_mask = memo_mask[act]
     l_solo, l_exec, delta_o, delta_u = static_gain_terms(
         lat, prob, mask, pmask, adj, idle_window, N,
         memo_mask=memo_mask, model_delay=model_delay, xp=np,
     )
-
-    fit_lim = _fit_limit(limit)
-    if w is None:
-        w = np.ones(K)
+    # Second prune: ΔI ≥ 0 only ever subtracts, so q·(ΔO+λΔU)·k_valid·w
+    # is a static per-row EU ceiling — rows at/below 0 can never clear the
+    # eu > 0 eligibility bar.
+    static_gain = delta_o + lam * delta_u
+    pos = np.flatnonzero(q * static_gain * k_valid * w > 0.0)
+    if not len(pos):
+        return admitted, eu_adm
+    if len(pos) < len(act):
+        act = act[pos]
+        l_exec, static_gain = l_exec[pos], static_gain[pos]
+        q, k_valid, rho, w = q[pos], k_valid[pos], rho[pos], w[pos]
     remaining = k_valid.copy()
-    admitted = np.zeros(K)
-    demand = np.zeros_like(np.asarray(auth_rho, float))
-    eu_adm = np.zeros(K)
+    demand = np.zeros_like(auth_rho)
+    adm_c = np.zeros(len(act))
+    eu_c = np.zeros(len(act))
+    # The greedy loop below is ``eu_given_admitted`` inlined with its
+    # loop-invariant subexpressions hoisted (same operations, same order —
+    # bit-identical row values, verified by the kernel-equivalence suite).
+    # Beams of dozens-to-hundreds run this every admission pass with ~1
+    # pick per iteration, so per-iteration ufunc dispatch — not the (K,R)
+    # arithmetic — is the cost; hoisting ``rho > 0``, the static-gain
+    # combination, and the duplicated ``maximum(util, 1)`` roughly halves
+    # it.
+    rho_pos = rho > 0
     while True:
-        eu, _ = eu_given_admitted(
-            l_exec, delta_o, delta_u, q, rho, k_valid,
-            auth_rho + demand, cap, lam, mu, idle_window, xp=np,
-        )
+        admitted_rho = auth_rho + demand
+        util = (admitted_rho[None, :] + rho) / cap[None, :]
+        u1 = np.maximum(util, 1.0)
+        stretch = np.where(rho_pos, u1, 1.0).max(axis=1)
+        self_pen = l_exec * (stretch - 1.0)
+        adm_util = admitted_rho / cap
+        adm_stretch_before = np.maximum(adm_util, 1.0).max()
+        adm_stretch_after = np.where(
+            admitted_rho[None, :] > 0, u1, 1.0).max(axis=1)
+        inflicted = np.maximum(
+            adm_stretch_after - adm_stretch_before, 0.0) * idle_window
+        delta_i = self_pen + inflicted
+        eu = q * (static_gain - mu * delta_i) * k_valid
         eu = eu * w
         fits = np.all(demand[None, :] + rho <= fit_lim[None, :], axis=1)
         elig = (remaining > 0) & fits & (eu > 0.0)
-        if not elig.any():
-            return admitted, eu_adm
-        pick = int(np.argmax(np.where(elig, eu, -np.inf)))
-        remaining[pick] = 0.0
-        admitted[pick] = 1.0
-        eu_adm[pick] = eu[pick]
-        demand = demand + rho[pick]
+        # Zero-demand picks (fully memo-served prefixes) leave ``demand``
+        # — and therefore every term above — untouched, so consecutive
+        # ones resolve against the SAME eu/fits without a rescore: just
+        # retire the picked row from eligibility, exactly what the full
+        # recompute would have done.
+        while True:
+            if not elig.any():
+                admitted[act] = adm_c
+                eu_adm[act] = eu_c
+                return admitted, eu_adm
+            pick = int(np.argmax(np.where(elig, eu, -np.inf)))
+            remaining[pick] = 0.0
+            adm_c[pick] = 1.0
+            eu_c[pick] = eu[pick]
+            if rho[pick].any():
+                demand = demand + rho[pick]
+                break
+            elig[pick] = False
 
 
 def fused_admit(

@@ -147,6 +147,12 @@ class ResultStore:
         self.pending: Dict[MemoKey, _Pending] = {}
         self._read_index: Dict[str, Set[MemoKey]] = {}
         self._tools: Dict[str, int] = {}     # tool -> live entry count
+        # tool -> MONOTONE publish count.  A key can only BECOME servable
+        # through a publish of its tool (invalidation/replacement only
+        # retract), so a scoring-time "nothing for this node" verdict stays
+        # correct until this counter moves — the memo-mask pass caches its
+        # per-node verdicts against it (see BPasteRuntime._memo_terms).
+        self.tool_pubs: Dict[str, int] = {}
         # counters (runtime copies these into Metrics at run end)
         self.publishes: int = 0
         self.invalidations: int = 0
@@ -232,6 +238,7 @@ class ResultStore:
         for nk in entry.reads:
             self._read_index.setdefault(nk, set()).add(key)
         self._tools[tool] = self._tools.get(tool, 0) + 1
+        self.tool_pubs[tool] = self.tool_pubs.get(tool, 0) + 1
         self.publishes += 1
         self._resolve_pending(key, entry)
         return entry

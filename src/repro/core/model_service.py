@@ -173,6 +173,7 @@ class ModelStepService:
         dur = batched_step_latency(works, self.marginal)
         name = batch[0].name if b == 1 else (
             f"model_batch[b{self._batch_seq}x{b}]")
+        batch_id = self._batch_seq
         self._batch_seq += 1
         self._book_dispatch(batch, queued)
 
@@ -183,7 +184,7 @@ class ModelStepService:
         job = self.sim.new_job(
             name, self.rho, dur, speculative=False, on_complete=done,
             meta={"eid": batch[0].eid, "eids": [r.eid for r in batch],
-                  "batch_size": b},
+                  "batch_size": b, "batch": batch_id},
         )
         self.sim.start(job)
 

@@ -48,7 +48,7 @@ import numpy as np
 
 import time
 
-from repro.core.admission import bucket_k, fused_admit, greedy_admit
+from repro.core.admission import _fit_limit, bucket_k, fused_admit, greedy_admit
 from repro.core.scoring import tenant_fairness_weights
 from repro.core.events import (
     DEFAULT_TOOLS, RESOURCE_DIMS, Event, ResourceVector, SafetyLevel, ToolSpec,
@@ -83,6 +83,20 @@ class NodeRun:
                                   # result store (launch deduped)
     served: bool = False          # result came from the store at zero cost
                                   # (no job, no burn — not "invested" work)
+    args_epoch: int = -1          # EpisodeState.epoch the cached resolution
+    args_cache: Optional[Dict[str, Any]] = None  # below was computed at
+    mkey_epoch: int = -1          # same guard for the canonical memo key
+    mkey_cache: Any = None
+    # memo-mask servability verdict cache (_memo_terms pass 1).  A verdict
+    # can only change if the episode's epoch moved (args / sandbox / node
+    # state), the node's tool saw a NEW publish (store.tool_pubs — the only
+    # way an unservable key becomes servable), or — for a positive verdict
+    # — any invalidation fired (the only way a servable entry retracts
+    # without a republish).
+    serv_epoch: int = -1
+    serv_pubs: int = -1
+    serv_inval: int = -1
+    serv_ok: bool = False
 
 
 @dataclass
@@ -125,6 +139,14 @@ class EpisodeState:
     # tenant's cold tools (a global scalar did exactly that under
     # concurrency > 1)
     warm_until: float = -1.0
+    idx: int = -1                 # position in BPasteRuntime.episodes — the
+                                  # key the event scheduler's dirty-sets and
+                                  # per-episode caches are indexed by
+    epoch: int = 0                # bumped on every dirtying event; guards the
+                                  # per-NodeRun resolved-args cache (the
+                                  # pseudo-history inputs — history prefix,
+                                  # inflight, path node results — only change
+                                  # through events that mark the episode dirty)
 
 
 @dataclass
@@ -132,6 +154,21 @@ class RuntimeConfig:
     mode: str = "bpaste"
     admission: str = "fused"      # "fused" (one-dispatch admit_beam kernel)
                                   # | "reference" (per-iteration greedy oracle)
+    scheduler: str = "event"      # "event" (dirty-set tick loop: an episode
+                                  # is re-examined only when one of its
+                                  # wakeup triggers fired — O(dirty) per
+                                  # tick) | "dense" (the PR-5 reference
+                                  # loop: every phase scans every episode
+                                  # every tick — O(c); decision-identical,
+                                  # kept as the equivalence oracle)
+    record_log: bool = True       # simulator event log (start/finish/...)
+                                  # — an unbounded list; benches at c=1024
+                                  # turn it off (trace= is the opt-in full
+                                  # recorder)
+    trace: Any = None             # optional trace.GanttRecorder (or any
+                                  # recorder(sim, kind, job) callable)
+                                  # attached to the simulator for
+                                  # per-episode timeline dumps
     assembly: str = "tree"        # "tree" (branching subgraphs, multi-root
                                   # fill) | "chain" (pre-tree linear baseline)
     beam_k: int = 12              # multi-root fill needs slots: makespan,
@@ -163,6 +200,18 @@ class RuntimeConfig:
     # code, which every equivalence/regression test relies on.  Batching is
     # the model-side lever for the accel-bound edge regime where the
     # model-step queue (not tool work) is the bottleneck.
+    host_admit_max: int = 512     # pools at/below this take the host-side
+                                  # numpy admit kernel; above it, the one-
+                                  # dispatch XLA while_loop.  On CPU a
+                                  # single XLA dispatch costs ~1 ms — and
+                                  # every fresh bucketed pool shape costs
+                                  # an in-run compile — which dwarfs the
+                                  # numpy arithmetic up to mid-hundreds of
+                                  # candidates (the two kernels are
+                                  # decision-identical — the fused-
+                                  # admission equivalence suite and the
+                                  # pinned end-to-end metrics both gate
+                                  # this routing)
     model_max_batch: int = 1
     model_batch_linger: float = 1.5   # admission window (sim s) a forming
                                       # batch stays open from its first
@@ -236,6 +285,11 @@ class Metrics:
     sched_admit_seconds: float = 0.0
     sched_pack_hits: int = 0
     sched_pack_misses: int = 0
+    # whole-tick scheduler overhead (phases 1-4 + QoS accounting): the
+    # number the event-driven refactor is judged on —
+    # benchmarks/bench_scheduler.py reports it as us/tick/episode
+    sched_ticks: int = 0
+    sched_tick_seconds: float = 0.0
 
     def summary(self) -> Dict[str, float]:
         lat = np.array(self.episode_latencies) if self.episode_latencies else np.zeros(1)
@@ -266,6 +320,11 @@ class Metrics:
             "sched_pack_hit_rate": (
                 self.sched_pack_hits
                 / max(self.sched_pack_hits + self.sched_pack_misses, 1)
+            ),
+            "sched_ticks": self.sched_ticks,
+            "sched_us_per_tick": (
+                self.sched_tick_seconds * 1e6 / self.sched_ticks
+                if self.sched_ticks else 0.0
             ),
             "truncated": float(self.truncated),
             "worst_tenant_latency": (
@@ -338,6 +397,10 @@ class BPasteRuntime:
             raise ValueError(
                 f"RuntimeConfig.admission must be 'fused' or 'reference', "
                 f"got {rcfg.admission!r}")
+        if rcfg.scheduler not in ("event", "dense"):
+            raise ValueError(
+                f"RuntimeConfig.scheduler must be 'event' or 'dense', "
+                f"got {rcfg.scheduler!r}")
         self.machine = machine
         self.policy = policy
         self.rcfg = rcfg
@@ -356,6 +419,33 @@ class BPasteRuntime:
                              k_max=rcfg.beam_k, n_max=rcfg.max_nodes)
         self.metrics = Metrics()
         self.episodes = [EpisodeState(ep, AgentState()) for ep in episodes]
+        for i, es in enumerate(self.episodes):
+            es.idx = i
+        self._eid2idx = {es.ep.eid: es.idx for es in self.episodes}
+        # ---- event-driven tick state (scheduler="event") -------------
+        # Dirty-sets index EPISODES (by es.idx); marks are recorded
+        # unconditionally in both modes (set adds are cheap, and an extra
+        # mark is always safe — the bug class to defend against is a
+        # MISSING mark, which would leave an episode's cached beam /
+        # frontier stale while the dense loop would have rebuilt it).
+        self._event = rcfg.scheduler == "event"
+        self._dirty: set = set()       # beam/frontier caches need rebuild
+        self._acting: set = set()      # pending authoritative action to match
+        self._auth_idx: set = set()    # non-empty auth_queue
+        self._n_serving = 0            # episodes in phases other than
+                                       # init/done (replaces the O(c)
+                                       # _launch_wave scan)
+        # per-episode phase-4 caches, rebuilt only for dirty episodes:
+        # _frontiers[i] = [(hr, frontier_indices)] over ALL active branches
+        # with a non-empty launch frontier; _contrib[i] = the idle subset
+        # formatted as shared-pool entries; _nact[i] = active-branch count
+        # (the beam-occupancy contribution)
+        self._frontiers: Dict[int, List[Tuple[HypRun, List[int]]]] = {}
+        self._contrib: Dict[int, List[Tuple[EpisodeState, HypRun, List[int]]]] = {}
+        self._nact: Dict[int, int] = {}
+        self._n_active_tot = 0
+        self._spec_idx: set = set()    # episodes with cached frontiers
+        self._pool_idx: set = set()    # episodes contributing pool candidates
         # runtime-GLOBAL result store: one cache spans every episode/tenant,
         # so a tenant at saturation is served from a sibling's warm
         # speculation (speculative value decoupled from speculative
@@ -364,6 +454,12 @@ class BPasteRuntime:
         self.store = ResultStore()
         self._memo_on = rcfg.memo and rcfg.mode != "serial"
         self._rho_cache: Dict[int, np.ndarray] = {}   # hid -> static prefix_rho
+        self._pack_rows: Dict[int, tuple] = {}        # hid -> pack_beam row set
+        # (hid, frozenset(excl)) -> memo-excluded prefix_rho: a pure function
+        # of the immutable hypothesis and the exclusion set, so entries never
+        # go stale — the memo pass otherwise re-runs the prefix DP for every
+        # partially-memoized candidate every tick (top profile entry at c≫1)
+        self._rho_excl_cache: Dict[tuple, np.ndarray] = {}
         self._cap = machine.cap_array()               # Machine is frozen
         self._wave_ptr = 0
         # shared-beam incremental packing: ONE PackedBeam cache for the
@@ -372,7 +468,9 @@ class BPasteRuntime:
         self._packed_beam: Optional[PackedBeam] = None
         self._packed_sig: Optional[Tuple] = None
         self._arrival_timer: Optional[SimJob] = None
-        self.sim = Simulator(machine, self._tick)
+        self.sim = Simulator(machine, self._tick,
+                             record_log=rcfg.record_log,
+                             recorder=rcfg.trace)
         # batched model-step service: owns the model-step queue (the sole
         # authoritative path on an accel-bound edge box).  max_batch=1 is a
         # synchronous pass-through, bit-identical to spawning solo jobs here.
@@ -400,8 +498,25 @@ class BPasteRuntime:
         self.metrics.memo_entries = len(self.store)
         return self.metrics
 
+    def _mark_dirty(self, es: EpisodeState):
+        """Wake an episode for the next phase-4 beam/frontier rebuild.
+        Called unconditionally (both schedulers): a stray mark costs one
+        set-add, a missing one leaves a stale cache.  Also advances the
+        episode's epoch, invalidating every cached arg resolution — a spare
+        bump costs one re-resolve, a missing one serves stale args."""
+        es.epoch += 1
+        if es.idx >= 0:
+            self._dirty.add(es.idx)
+
+    def _mark_dirty_eid(self, eid):
+        i = self._eid2idx.get(eid)
+        if i is not None:
+            self._mark_dirty(self.episodes[i])
+
     def _launch_wave(self):
-        active = sum(1 for es in self.episodes if es.phase not in ("init", "done"))
+        # incremental serving count (clamped: unit tests drive episodes
+        # through _finish_action without ever launching them here)
+        active = max(self._n_serving, 0)
         while (active < self.rcfg.max_concurrent_episodes
                and self._wave_ptr < len(self.episodes)):
             es = self.episodes[self._wave_ptr]
@@ -414,6 +529,8 @@ class BPasteRuntime:
             self._wave_ptr += 1
             es.t_start = self.sim.now
             es.phase = "reasoning"
+            self._n_serving += 1
+            self._mark_dirty(es)
             self._start_model_step(es)
             active += 1
 
@@ -460,6 +577,9 @@ class BPasteRuntime:
         step = es.ep.steps[es.step_idx]
         es.pending_action = (step.tool, dict(step.args))
         es.phase = "acting"
+        if es.idx >= 0:
+            self._acting.add(es.idx)
+        self._mark_dirty(es)
         # Phase 1 happens inside the tick that follows this completion.
 
     def _finish_action(self, es: EpisodeState, result: Any, t_start: float):
@@ -467,6 +587,7 @@ class BPasteRuntime:
         ``now - solo_work`` understated the start under co-run interference
         (stretched jobs span more wall time than their solo work) and was
         plain wrong for promoted jobs, which started before the agent asked."""
+        self._mark_dirty(es)
         step = es.ep.steps[es.step_idx]
         ev = Event("tool", step.tool, dict(step.args), result,
                    t_start, self.sim.now, es.ep.eid)
@@ -483,6 +604,7 @@ class BPasteRuntime:
         es.step_idx += 1
         if es.step_idx >= len(es.ep.steps):
             es.phase = "done"
+            self._n_serving = max(0, self._n_serving - 1)
             es.t_end = self.sim.now
             self.metrics.episode_latencies.append(es.t_end - es.t_start)
             self.metrics.tenant_latency[es.ep.eid] = es.t_end - es.t_start
@@ -522,6 +644,9 @@ class BPasteRuntime:
             speculative=False, on_complete=done, meta={"eid": es.ep.eid},
         )
         es.auth_queue.append(job)
+        if es.idx >= 0:
+            self._auth_idx.add(es.idx)
+        self._mark_dirty(es)
 
     # ==================================================================
     # Phase 1: confirm / promote
@@ -555,6 +680,23 @@ class BPasteRuntime:
         args = {b.arg_name: b.resolve(hist) for b in nr.node.bindings}
         return {k: v for k, v in args.items() if v is not None}
 
+    def _cached_node_args(self, es: EpisodeState, hr: HypRun, i: int) -> Dict[str, Any]:
+        """Epoch-guarded arg resolution: between dirtying events of an
+        episode every `_pseudo_history` input is frozen (history prefix is
+        append-only under ``base_len``, inflight and path node results only
+        change through handlers that ``_mark_dirty``), so the resolution is
+        a pure function of (hr, i, es.epoch).  The admission memo pass
+        re-resolves every frontier binding every tick — under c≫1 tenants
+        this cache turns that from the top profile entry into a dict hit.
+        Callers that PERSIST the dict must copy it (the cache owns this one)."""
+        nr = hr.node_runs[i]
+        if nr.args_epoch == es.epoch and nr.args_cache is not None:
+            return nr.args_cache
+        args = self._resolve_node_args(es, hr, i)
+        nr.args_epoch = es.epoch
+        nr.args_cache = args
+        return args
+
     # Phase-1 match preference: a completed speculative result beats a
     # running one beats an unstarted node.  With a wide beam several
     # branches can contain the same tool; first-in-list order would let an
@@ -581,7 +723,7 @@ class BPasteRuntime:
                 if nr.status == "pending":
                     if not prior_done:
                         continue
-                    cand_args = self._resolve_node_args(es, hr, i)
+                    cand_args = self._cached_node_args(es, hr, i)
                     if any(cand_args.get(k) != v for k, v in args.items() if k in cand_args):
                         continue              # resolved args contradict
                 elif nr.resolved_args != args:
@@ -604,10 +746,24 @@ class BPasteRuntime:
         preempted; a ready PENDING node reuses its prefix state and is
         served or executed from the boundary; a MISS settles its
         consequences (contradiction squash, mis-speculation accounting),
-        then serves from the cross-episode store or re-executes."""
-        for es in self.episodes:
+        then serves from the cross-episode store or re-executes.
+
+        Event scheduler: only episodes whose reasoning step completed since
+        the last tick (the ``_acting`` wakeup set) are examined — an episode
+        can only have a pending action if ``_on_reasoning_done`` fired for
+        it, and that is exactly where the set is fed.  Dense mode scans all
+        episodes; both orders are ascending episode index, so the match /
+        commit / store-serve sequence is identical."""
+        if self._event:
+            woken = sorted(self._acting)
+            self._acting.clear()
+            targets = [self.episodes[i] for i in woken]
+        else:
+            targets = self.episodes
+        for es in targets:
             if es.phase != "acting" or es.pending_action is None:
                 continue
+            self._mark_dirty(es)
             tool, args = es.pending_action
             m = self._match_action(es, tool, args)
             if m is None:
@@ -647,8 +803,11 @@ class BPasteRuntime:
                 # counterfactual here is PROMOTION, which would only have
                 # cost the job's REMAINING solo work — not the full latency
                 self._commit_path(es, hr, i, inclusive=False)
-                entry = self._try_serve(es, tool, args,
-                                        saved=max(nr.job.remaining, 0.0))
+                # lazy settlement: the raw ``remaining`` field of a running
+                # job is only current as of its last rate change
+                entry = self._try_serve(
+                    es, tool, args,
+                    saved=max(self.sim.settled_remaining(nr.job), 0.0))
                 if entry is not None:
                     # a sibling's entry landed while our copy was mid-flight:
                     # serving is instant, so the run is redundant — preempt
@@ -669,9 +828,10 @@ class BPasteRuntime:
                     es.pending_action = None
                     self._finish_action(es, entry.result, self.sim.now)
                     continue
-                # promote: job becomes authoritative, non-preemptible
-                nr.job.speculative = False
-                nr.job.priority = 0
+                # promote: job becomes authoritative, non-preemptible (via
+                # the simulator API so the incremental auth/spec demand
+                # split stays coherent)
+                self.sim.set_speculative(nr.job, False)
                 nr.status = "promoted"
                 self.metrics.promotions += 1
                 es.phase = "executing"
@@ -827,6 +987,7 @@ class BPasteRuntime:
         # mining context length the builder stamps longer/shorter
         # context_keys, and comparing them against a 2-suffix misclassified
         # every carried-over branch (wrongly squashed or wrongly kept)
+        self._mark_dirty(es)
         cl = max(self.engine.context_len, 1)
         tail = tuple(signature(e) for e in hist[-cl:])
         tails = {tail[-l:] for l in range(1, len(tail) + 1)} or {()}
@@ -900,6 +1061,7 @@ class BPasteRuntime:
         base state advanced after the speculative run (sandbox.is_stale) —
         the paper's "replayable prefix" reuse semantics without
         stale-snapshot risk."""
+        self._mark_dirty(es)          # node statuses flip to reused below
         fac = StateFacade(es.state)
         path = hr.path_to(i)
         if not inclusive:
@@ -945,6 +1107,7 @@ class BPasteRuntime:
             completion callback will never fire (accounting happens before
             any status mutation; the old code flipped running->pending first
             and left mid-flight burn out of spec_solo entirely)."""
+        self._mark_dirty(es)
         hr.status = "squashed"
         hr.sandbox.squash()
         for nr in hr.node_runs:
@@ -976,8 +1139,17 @@ class BPasteRuntime:
         """Preempt speculative work (ascending EU) on every resource dim that
         is oversubscribed AND where speculation actually contributes — a dim
         the authoritative set alone oversubscribes cannot be relieved by
-        preemption, so it never justifies one."""
-        auth_pending = [j for es in self.episodes for j in es.auth_queue]
+        preemption, so it never justifies one.
+
+        Event scheduler: queued authoritative jobs can only exist in
+        episodes ``_start_auth_tool`` touched (the ``_auth_idx`` wakeup
+        set), so the gather is O(|queued|) instead of O(c); index order
+        matches the dense scan, so ``need`` sums in the same order."""
+        if self._event:
+            auth_pending = [j for i in sorted(self._auth_idx)
+                            for j in self.episodes[i].auth_queue]
+        else:
+            auth_pending = [j for es in self.episodes for j in es.auth_queue]
         if not auth_pending:
             return
         need = np.sum([j.demand for j in auth_pending], axis=0)
@@ -1007,6 +1179,9 @@ class BPasteRuntime:
             # if the branch is eventually followed
             self.metrics.spec_solo_seconds += victim.executed_solo_seconds
             self.metrics.wasted_solo_seconds += victim.executed_solo_seconds
+            # the victim's node reverts to pending: its episode's cached
+            # launch frontier changed
+            self._mark_dirty_eid(victim.meta.get("eid"))
             nr = victim.meta.get("node_run")
             if nr is not None:
                 nr.status = "pending"
@@ -1023,6 +1198,14 @@ class BPasteRuntime:
         NOT pass through here: they are owned by the model-step service
         (``_start_model_step`` → ``ModelStepService.submit``), which
         dispatches solo or micro-batched authoritative jobs directly."""
+        if self._event:
+            woken = sorted(self._auth_idx)
+            self._auth_idx.clear()
+            for i in woken:
+                es = self.episodes[i]
+                while es.auth_queue:
+                    self.sim.start(es.auth_queue.pop(0))
+            return
         for es in self.episodes:
             while es.auth_queue:
                 job = es.auth_queue.pop(0)
@@ -1038,8 +1221,21 @@ class BPasteRuntime:
         tick each measured slack *before* sibling episodes' admissions
         launched, so two tenants could both be admitted against the same
         slack (cross-tenant double-booking); a single pass accumulates the
-        admitted demand across tenants inside the greedy loop."""
+        admitted demand across tenants inside the greedy loop.
+
+        Event scheduler: beam refresh + frontier walks run only for DIRTY
+        episodes (something they subscribe to fired since their last
+        rebuild: a job/timer completion, a beam change, a memo publish
+        consumed by one of their nodes, an authoritative action landing);
+        clean episodes contribute their cached frontiers/pool entries.
+        Slack needs no dirty tracking — it is sampled fresh inside every
+        admission pass, which runs whenever the pooled beam is non-empty,
+        so slack-threshold crossings are seen the tick they happen."""
         if self.rcfg.mode == "serial":
+            self._dirty.clear()
+            return
+        if self._event:
+            self._phase4_event()
             return
         pool: List[Tuple[EpisodeState, HypRun, List[int]]] = []
         n_active = 0
@@ -1065,6 +1261,61 @@ class BPasteRuntime:
                     pool.append((es, hr, fr))
         self._admit_shared(pool, n_active)
         self._launch_nodes()
+
+    def _phase4_event(self):
+        """Dirty-set variant of the shared admission pass: O(dirty) rebuild
+        + O(pool) admission instead of O(c) scans.  Per-episode caches
+        (active-branch count, launch frontiers, pool candidacy) are rebuilt
+        only for woken episodes; the pooled candidate list is then assembled
+        from cache in ascending episode index — the exact order the dense
+        scan produces, so packing signatures, fairness weights and greedy
+        admission see identical inputs."""
+        for i in sorted(self._dirty):
+            self._rebuild_cache(i)
+        self._dirty.clear()
+        pool: List[Tuple[EpisodeState, HypRun, List[int]]] = []
+        for i in sorted(self._pool_idx):
+            pool.extend(self._contrib[i])
+        self._admit_shared(pool, self._n_active_tot)
+        self._launch_nodes_event()
+
+    def _rebuild_cache(self, i: int):
+        """Recompute one episode's phase-4 contribution: refresh its beam,
+        walk every active branch's launch frontier once (the walk also
+        settles env_warmup no-ops, same as the dense loop's walk), and
+        split the result into launchable caches — ALL branches with a
+        frontier (``_frontiers``, what _launch_nodes_event retries each
+        tick) and the idle subset (``_contrib``, the admission pool)."""
+        es = self.episodes[i]
+        frs: List[Tuple[HypRun, List[int]]] = []
+        contrib: List[Tuple[EpisodeState, HypRun, List[int]]] = []
+        nact = 0
+        if es.phase in ("reasoning", "executing") and es.history:
+            self._refresh_beam(es)
+            for hr in es.hyp_runs:
+                if hr.status != "active":
+                    continue
+                nact += 1
+                fr = self._launch_frontier(es, hr)
+                if not fr:
+                    continue
+                frs.append((hr, fr))
+                if not any(nr.status == "running" for nr in hr.node_runs):
+                    contrib.append((es, hr, fr))
+        self._n_active_tot += nact - self._nact.get(i, 0)
+        self._nact[i] = nact
+        if frs:
+            self._frontiers[i] = frs
+            self._spec_idx.add(i)
+        else:
+            self._frontiers.pop(i, None)
+            self._spec_idx.discard(i)
+        if contrib:
+            self._contrib[i] = contrib
+            self._pool_idx.add(i)
+        else:
+            self._contrib.pop(i, None)
+            self._pool_idx.discard(i)
 
     def _remaining_key(self, node_runs_or_nodes):
         out = []
@@ -1147,7 +1398,11 @@ class BPasteRuntime:
             return self._packed_beam
         self.metrics.sched_pack_misses += 1
         k = bucket_k(len(cand), self.scorer.k_max)
-        self._packed_beam = pack_beam([hr.hyp for hr in cand], k, self.scorer.n_max)
+        if len(self._pack_rows) > 8192:
+            self._pack_rows.clear()           # bounded (hids grow per build)
+        self._packed_beam = pack_beam([hr.hyp for hr in cand], k,
+                                      self.scorer.n_max,
+                                      row_cache=self._pack_rows)
         self._packed_sig = sig
         return self._packed_beam
 
@@ -1195,30 +1450,59 @@ class BPasteRuntime:
         # for real (over-admission past the Eq. 5 limit).
         excls: List[set] = []
         any_memo = False
+        tool_pubs = self.store.tool_pubs
+        inval = self.store.invalidations
+        n_max = self.scorer.n_max
         for es, hr, fr in pool:
             excl = set()
+            epoch = es.epoch
             for i in fr:
                 nr = hr.node_runs[i]
                 node = nr.node
-                if node.kind != NodeKind.TOOL or node.idx >= self.scorer.n_max:
+                if node.kind != NodeKind.TOOL or node.idx >= n_max:
                     continue
-                if not self.store.has_tool(nr.run_tool):
-                    continue                  # cheap pre-filter
-                if node.bindings:
-                    args = self._resolve_node_args(es, hr, i)
-                    if len(args) < len(node.bindings):
-                        continue
-                else:
-                    args = nr.resolved_args
-                entry = self.store.peek(nr.run_tool, args)
-                # track=False: a scoring-time peek must not hand the branch
-                # a base read-set it never earned (the launch-time serve
-                # re-validates with tracking ON before anything is consumed)
-                if entry is None or not self.store.validate(
-                        entry, hr.sandbox, track=False):
+                # verdict cache: every input to the servability decision
+                # below is pinned by (episode epoch, this tool's publish
+                # count, and — positives only — the invalidation counter);
+                # see the NodeRun field comment for the argument.
+                tp = tool_pubs.get(nr.run_tool, 0)
+                if (nr.serv_epoch == epoch and nr.serv_pubs == tp
+                        and (not nr.serv_ok or nr.serv_inval == inval)):
+                    if nr.serv_ok:
+                        excl.add(node.idx)
+                        any_memo = True
                     continue
-                excl.add(node.idx)
-                any_memo = True
+                ok = False
+                if self.store.has_tool(nr.run_tool):
+                    if node.bindings:
+                        args = self._cached_node_args(es, hr, i)
+                        complete = len(args) >= len(node.bindings)
+                    else:
+                        args = nr.resolved_args
+                        complete = True
+                    if complete:
+                        # canonical key under the same epoch guard as the
+                        # args (the canonicalization repr is pure in
+                        # (tool, args))
+                        if nr.mkey_epoch == epoch:
+                            key = nr.mkey_cache
+                        else:
+                            key = memo_key(nr.run_tool, args)
+                            nr.mkey_epoch, nr.mkey_cache = epoch, key
+                        entry = self.store.entries.get(key)
+                        if entry is not None and not entry.valid:
+                            entry = None              # exactly store.peek
+                        # track=False: a scoring-time peek must not hand
+                        # the branch a base read-set it never earned (the
+                        # launch-time serve re-validates with tracking ON
+                        # before anything is consumed)
+                        ok = entry is not None and self.store.validate(
+                            entry, hr.sandbox, track=False)
+                nr.serv_epoch, nr.serv_pubs = epoch, tp
+                nr.serv_inval, nr.serv_ok = inval, ok
+                if ok:
+                    excl.add(node.idx)
+                    any_memo = True
             excls.append(excl)
         if not any_memo:
             return None, None                 # no rho recompute on the hot path
@@ -1232,7 +1516,14 @@ class BPasteRuntime:
             if excl:
                 for idx in excl:
                     masks[ci, idx] = 1.0
-                rhos[ci] = prefix_rho(hr.hyp, frozenset(excl))
+                ek = (hr.hyp.hid, frozenset(excl))
+                rho_e = self._rho_excl_cache.get(ek)
+                if rho_e is None:
+                    if len(self._rho_excl_cache) > 8192:
+                        self._rho_excl_cache.clear()  # bounded
+                    rho_e = self._rho_excl_cache[ek] = prefix_rho(
+                        hr.hyp, ek[1])
+                rhos[ci] = rho_e
             else:
                 hid = hr.hyp.hid
                 cached = self._rho_cache.get(hid)
@@ -1267,6 +1558,45 @@ class BPasteRuntime:
             return
         weights = self._fairness_weights(pool)
         memo_masks, memo_rho = self._memo_terms(pool)
+        # Never-fits pre-filter: the greedy (reference AND fused) admits a
+        # candidate only when admitted_demand + ρ ≤ _fit_limit(limit), with
+        # admitted_demand monotone from zero — so a candidate whose OWN
+        # effective prefix ρ already exceeds the fit limit on any dimension
+        # can never be picked on ANY iteration, and (EU is per-row, weights
+        # are per-candidate) its presence cannot perturb any other row.
+        # Dropping such rows before packing is decision- and value-identical
+        # while collapsing the kernel's bucketed K in exactly the saturated
+        # c≫1 regime where admission dominates the tick.  Weights/memo terms
+        # are computed on the ORIGINAL pool above so per-candidate values
+        # (incl. the <2-tenants uniform-weight gate) cannot shift.
+        fit_lim = _fit_limit(np.minimum(slack, budget))
+        if memo_rho is not None:
+            eff_rho = memo_rho
+        else:
+            eff_rho = np.empty((len(cand), RESOURCE_DIMS))
+            for ci, hr in enumerate(cand):
+                hid = hr.hyp.hid
+                rho_c = self._rho_cache.get(hid)
+                if rho_c is None:
+                    if len(self._rho_cache) > 4096:
+                        self._rho_cache.clear()
+                    rho_c = self._rho_cache[hid] = prefix_rho(hr.hyp)
+                eff_rho[ci] = rho_c
+        keep = np.flatnonzero(np.all(eff_rho <= fit_lim[None, :], axis=1))
+        if len(keep) < len(cand):
+            kept = set(keep.tolist())
+            for ci, hr in enumerate(cand):
+                if ci not in kept:
+                    hr.meta_admitted = False  # exactly the rejected-path mark
+            if not len(keep):
+                return
+            cand = [cand[ci] for ci in keep]
+            if weights is not None:
+                weights = weights[keep]
+            if memo_masks is not None:
+                memo_masks = memo_masks[keep]
+            if memo_rho is not None:
+                memo_rho = memo_rho[keep]
         # model-step-service feedback: a branch's ΔU payoff (unlocking the
         # next reasoning step early) is discounted by the expected wait that
         # step would see in the batch admission window — 0.0 under the
@@ -1288,6 +1618,7 @@ class BPasteRuntime:
                 packed=self._packed_for(cand), weights=weights,
                 memo_masks=memo_masks, memo_rho=memo_rho,
                 model_delay=model_delay,
+                small_beam_threshold=self.rcfg.host_admit_max,
             )
         self.metrics.sched_admit_seconds += time.perf_counter() - t0
         self.metrics.sched_admit_calls += 1
@@ -1363,6 +1694,25 @@ class BPasteRuntime:
         for _, _, i, es, hr in ready:
             self._start_spec_node(es, hr, i)
 
+    def _launch_nodes_event(self):
+        """Cached-frontier variant of ``_launch_nodes``: the frontier walk
+        already ran in ``_rebuild_cache`` (this tick for dirty episodes, a
+        previous tick for clean ones — every node-status change dirties its
+        episode, so the cache is current), and launching is a retry loop
+        over it — nodes that failed the fit/args check keep retrying every
+        tick exactly as the dense re-walk would."""
+        ready: List[Tuple[float, int, int, EpisodeState, HypRun]] = []
+        for idx in sorted(self._spec_idx):
+            es = self.episodes[idx]
+            for hr, fr in self._frontiers[idx]:
+                if hr.status != "active" or not getattr(hr, "meta_admitted", False):
+                    continue
+                for i in fr:
+                    ready.append((-hr.eu, hr.hyp.hid, i, es, hr))
+        ready.sort(key=lambda t: t[:3])
+        for _, _, i, es, hr in ready:
+            self._start_spec_node(es, hr, i)
+
     def _serve_spec(self, es: EpisodeState, hr: HypRun, i: int,
                     entry: MemoEntry) -> None:
         """Serve a store entry INTO a sandbox: the node completes instantly
@@ -1370,6 +1720,7 @@ class BPasteRuntime:
         and validation reads have already been pulled through the CowView —
         so the entry's dependencies sit in the branch's base read-set and
         conflict pruning covers served results like executed ones."""
+        self._mark_dirty(es)
         nr = hr.node_runs[i]
         self.store.apply_writes(entry, hr.sandbox)
         nr.result = entry.result
@@ -1389,21 +1740,33 @@ class BPasteRuntime:
         if nr.waiting:
             return False                  # subscribed to an in-flight twin
         if nr.node.kind == NodeKind.TOOL and nr.node.bindings:
-            nr.resolved_args = self._resolve_node_args(es, hr, i)
+            # copy: resolved_args outlives the epoch (sandbox events, memo
+            # keys), the cached dict does not
+            nr.resolved_args = dict(self._cached_node_args(es, hr, i))
             if len(nr.resolved_args) < len(nr.node.bindings):
                 return False                  # inputs not materialized yet
         key = None
         if self._memo_on and nr.node.kind == NodeKind.TOOL:
-            entry = self.store.peek(nr.run_tool, nr.resolved_args)
+            # epoch-cached canonical key (shared with _memo_terms): the
+            # launch retry loop re-peeks every candidate every tick, and
+            # re-canonicalizing unchanged args dominated those retries
+            if nr.mkey_epoch == es.epoch:
+                key = nr.mkey_cache
+            else:
+                key = memo_key(nr.run_tool, nr.resolved_args)
+                nr.mkey_epoch, nr.mkey_cache = es.epoch, key
+            entry = self.store.entries.get(key)
+            if entry is not None and not entry.valid:
+                entry = None                  # exactly store.peek
             if entry is not None and self.store.validate(entry, hr.sandbox):
                 self._serve_spec(es, hr, i, entry)
                 return True
-            key = memo_key(nr.run_tool, nr.resolved_args)
             if self.store.is_pending(key):
                 # an identical computation is in flight (another branch or
                 # tenant): subscribe to its result instead of burning the
                 # slack twice
                 def on_pub(pub_entry, es=es, hr=hr, i=i):
+                    self._mark_dirty(es)   # node unblocked (or re-armed)
                     nr2 = hr.node_runs[i]
                     nr2.waiting = False
                     if pub_entry is None:         # owner preempted: re-arm
@@ -1428,6 +1791,7 @@ class BPasteRuntime:
             dur *= self.rcfg.warm_discount
 
         def done(sim: Simulator, job: SimJob, es=es, hr=hr, i=i):
+            self._mark_dirty(es)      # node finished: frontier advances
             nr2 = hr.node_runs[i]
             mk = job.meta.get("memo_key")
             if nr2.run_tool == "env_warmup":
@@ -1468,15 +1832,22 @@ class BPasteRuntime:
             job.meta["memo_key"] = key
         nr.job = job
         nr.status = "running"
+        self._mark_dirty(es)          # idle branch became in-flight
         self.sim.start(job)
         return True
 
     # ==================================================================
     def _tick(self, sim: Simulator):
+        t0 = time.perf_counter()
         self._phase1()
         self._phase2()
         self._phase3()
         self._phase4()
+        self._qos_tick(sim)
+        self.metrics.sched_ticks += 1
+        self.metrics.sched_tick_seconds += time.perf_counter() - t0
+
+    def _qos_tick(self, sim: Simulator):
         # QoS accounting: authoritative slowdown attributable to speculation,
         # attributed per tenant (arrival timers are zero-demand bookkeeping
         # jobs — they would dilute the samples with 1.0 ratios)

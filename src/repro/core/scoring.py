@@ -110,7 +110,39 @@ def prefix_rho(h: BranchHypothesis, exclude: frozenset = frozenset()) -> np.ndar
     return np.sum([conc(i) for i in roots], axis=0)
 
 
-def pack_beam(hyps: Sequence[BranchHypothesis], k_max: int, n_max: int) -> PackedBeam:
+def pack_rows(h: BranchHypothesis, n_max: int) -> tuple:
+    """One hypothesis's packed row set — the per-row slice of every
+    PackedBeam table.  Hypotheses are immutable after build (node statuses
+    live on NodeRun, never read here), so rows keyed by hid are cacheable
+    forever: re-packing a pooled beam then costs an array copy per row
+    instead of the safe-prefix/parent-map/rho DP per node."""
+    N = n_max
+    node_lat = np.zeros(N)
+    node_prob = np.ones(N)
+    node_mask = np.zeros(N)
+    prefix_mask = np.zeros(N)
+    adj = np.zeros((N, N))
+    prefix_ids = {n.idx for n in h.safe_prefix()}
+    for n in h.nodes[:N]:
+        node_lat[n.idx] = n.est_latency
+        node_prob[n.idx] = n.cond_prob
+        node_mask[n.idx] = 1.0
+        if n.idx in prefix_ids:
+            prefix_mask[n.idx] = 1.0
+    for i, j in h.edges:
+        if i < N and j < N:
+            adj[i, j] = 1.0
+    return (node_lat, node_prob, node_mask, prefix_mask, adj, h.q,
+            prefix_rho(h))
+
+
+def pack_beam(hyps: Sequence[BranchHypothesis], k_max: int, n_max: int,
+              row_cache: Optional[dict] = None) -> PackedBeam:
+    """Pack a candidate beam into the fused-admission tables.  With a
+    ``row_cache`` ({hid: pack_rows(...)}, caller-owned and caller-bounded)
+    the per-hypothesis Python DP runs once per hid ever — incremental
+    re-packing for pooled cross-episode beams whose membership churns by
+    one episode at a time."""
     K, N = k_max, n_max
     node_lat = np.zeros((K, N))
     node_prob = np.ones((K, N))
@@ -121,19 +153,15 @@ def pack_beam(hyps: Sequence[BranchHypothesis], k_max: int, n_max: int) -> Packe
     rho = np.zeros((K, RESOURCE_DIMS))
     k_valid = np.zeros((K,))
     for k, h in enumerate(hyps[:K]):
+        if row_cache is None:
+            rows = pack_rows(h, N)
+        else:
+            rows = row_cache.get(h.hid)
+            if rows is None:
+                rows = row_cache[h.hid] = pack_rows(h, N)
         k_valid[k] = 1.0
-        q[k] = h.q
-        prefix_ids = {n.idx for n in h.safe_prefix()}
-        for n in h.nodes[:N]:
-            node_lat[k, n.idx] = n.est_latency
-            node_prob[k, n.idx] = n.cond_prob
-            node_mask[k, n.idx] = 1.0
-            if n.idx in prefix_ids:
-                prefix_mask[k, n.idx] = 1.0
-        rho[k] = prefix_rho(h)
-        for i, j in h.edges:
-            if i < N and j < N:
-                adj[k, i, j] = 1.0
+        (node_lat[k], node_prob[k], node_mask[k], prefix_mask[k], adj[k],
+         q[k], rho[k]) = rows
     return PackedBeam(node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid)
 
 

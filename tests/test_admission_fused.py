@@ -398,7 +398,15 @@ def test_bucket_k():
     assert admission.bucket_k(8, 8) == 8
     assert admission.bucket_k(9, 8) == 16
     assert admission.bucket_k(12, 8) == 16
-    assert admission.bucket_k(17, 8) == 24
+    # geometric above 2*k_max: the compiled-shape set stays log-bounded as
+    # the pooled cross-episode beam width moves tick to tick
+    assert admission.bucket_k(17, 8) == 32
+    assert admission.bucket_k(32, 8) == 32
+    assert admission.bucket_k(33, 8) == 64
+    assert admission.bucket_k(100, 8) == 128
+    # every bucket still holds its beam
+    for n in range(1, 200):
+        assert admission.bucket_k(n, 8) >= n
 
 
 # ======================================================================
