@@ -39,7 +39,8 @@ def _mk_hyp(hid, tools, q=0.8):
     return BranchHypothesis(hid, nodes, edges, q, context_key=("x",))
 
 
-def _sweep_cell(c: int, scheduler: str, engine: PatternEngine) -> Dict:
+def _sweep_cell(c: int, scheduler: str, engine: PatternEngine,
+                sanitize: bool = False) -> Dict:
     """One synthetic-tenant serving cell: c staggered episodes on a serve
     box, event or dense scheduler, log recording off (the c=1024 event log
     is a memory blowup — satellite knob record_log=False).  Returns the
@@ -51,23 +52,25 @@ def _sweep_cell(c: int, scheduler: str, engine: PatternEngine) -> Dict:
                                        arrival_stagger=0.5,
                                        shared_frac=0.5, shared_pool=4))
     box = _Machine(ResourceVector(cpu=24, mem_bw=200, io=1000, accel=8))
+    tag = "_sanitize" if sanitize else ""
     t0 = time.perf_counter()
     m = run_mode(eps, engine, "bpaste", box, seed=7,
                  max_concurrent_episodes=c, scheduler=scheduler,
-                 record_log=False, model_max_batch=8)
+                 record_log=False, model_max_batch=8, sanitize=sanitize)
     wall = time.perf_counter() - t0
     s = m.summary()
     us_per_tick_ep = s["sched_us_per_tick"] / max(c, 1)
     return {
-        "name": f"scheduler/tick_sweep_{scheduler}_c{c}",
+        "name": f"scheduler/tick_sweep_{scheduler}{tag}_c{c}",
         "us_per_call": us_per_tick_ep,
         "derived": (f"us/tick/episode (ticks={int(s['sched_ticks'])}, "
                     f"makespan={s['makespan']:.1f}s, wall={wall:.1f}s, "
                     f"budget={TICK_BUDGET_US}us)"),
-        "c": c, "scheduler": scheduler,
+        "c": c, "scheduler": scheduler, "sanitize": sanitize,
         "us_per_tick": s["sched_us_per_tick"],
         "ticks": int(s["sched_ticks"]),
         "wall_seconds": wall,
+        "sanitize_findings": s.get("sanitize_findings", 0),
     }
 
 
@@ -163,4 +166,22 @@ def run(smoke: bool = False) -> List[Dict]:
                      "derived": f"event_vs_dense={speedup:.1f}x "
                                 f"(us/tick/episode)",
                      "c": c, "speedup": speedup})
+
+    # ---- runtime-sanitizer overhead (ISSUE 7) -------------------------
+    # same c=8 event cell with RuntimeConfig.sanitize=True: the S1-S5
+    # cross-checks every 7th tick are diagnostics, so the row documents
+    # what turning them on costs (and that they find nothing on the
+    # default config — sanitize_findings lands in the derived string)
+    san = _sweep_cell(8, "event", pe, sanitize=True)
+    rows.append(san)
+    base = ev.get(8)
+    if base is not None:
+        ratio = san["us_per_call"] / max(base["us_per_call"], 1e-9)
+        rows.append({"name": "scheduler/sanitize_overhead_c8",
+                     "us_per_call": 0.0,
+                     "derived": (f"sanitize_vs_off={ratio:.1f}x "
+                                 f"(us/tick/episode, findings="
+                                 f"{san['sanitize_findings']})"),
+                     "c": 8, "sanitize_ratio": ratio,
+                     "sanitize_findings": san["sanitize_findings"]})
     return rows

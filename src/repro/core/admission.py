@@ -42,7 +42,6 @@ import numpy as np
 
 from repro.core.events import RESOURCE_DIMS
 from repro.core.hypothesis import BranchHypothesis
-from repro.core.interference import Machine
 from repro.core.scoring import (
     PackedBeam, Scorer, eu_given_admitted, pack_beam, prefix_rho,
     static_gain_terms,

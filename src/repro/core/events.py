@@ -14,7 +14,6 @@ Upstream: nothing (this is the shared vocabulary).  Downstream: everything
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from enum import IntEnum
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -55,13 +54,24 @@ RESOURCE_DIMS = 4
 
 @dataclass(frozen=True)
 class ToolSpec:
-    """Registered tool: safety class, resource profile, latency model."""
+    """Registered tool: safety class, resource profile, latency model, and a
+    *declared* state footprint.
+
+    ``reads``/``writes`` are glob patterns over namespaced state keys
+    (``M:``/``F:``/``E:`` prefixes, fnmatch semantics) describing what the
+    executor implementation may touch.  They are the contract the static
+    analyzer (core/analysis.py rule R1) and the runtime sanitizer (S4) check
+    the *tracked* per-call footprints against: a PREP_ONLY/READ_ONLY tool
+    whose implementation writes outside its declaration is exactly the kind
+    of mis-classification that lets a speculative run leak side effects."""
     name: str
     level: SafetyLevel
     rho: ResourceVector
     base_latency: float           # seconds, before interference
     latency_jitter: float = 0.2   # lognormal sigma
     transformed: Optional[str] = None  # speculative transform (e.g. dry-run)
+    reads: Tuple[str, ...] = ()   # declared read footprint (glob patterns)
+    writes: Tuple[str, ...] = ()  # declared write footprint (glob patterns)
 
     def sample_latency(self, rng: np.random.Generator) -> float:
         return float(self.base_latency * np.exp(rng.normal(0.0, self.latency_jitter)))
@@ -90,21 +100,38 @@ DEFAULT_TOOLS: Dict[str, ToolSpec] = {
     for t in [
         # Latency profile follows PASTE's characterization: tool execution
         # is a substantial (~50-60%) fraction of end-to-end agent latency.
+        # ``reads``/``writes`` declare the executor footprint (checked by
+        # core/analysis.py R1 against a tracked dry-run).  visit/fetch are
+        # READ_ONLY yet declare an F: write: the read-through cache write is
+        # an L1-safe idempotent materialization, declared so the analyzer
+        # can tell it from an *undeclared* side effect.
         ToolSpec("search", SafetyLevel.READ_ONLY, ResourceVector(0.2, 0.5, 5, 0), 2.5),
-        ToolSpec("visit", SafetyLevel.READ_ONLY, ResourceVector(0.3, 1.0, 20, 0), 4.0),
-        ToolSpec("fetch", SafetyLevel.READ_ONLY, ResourceVector(0.2, 1.0, 30, 0), 3.0),
+        ToolSpec("visit", SafetyLevel.READ_ONLY, ResourceVector(0.3, 1.0, 20, 0), 4.0,
+                 writes=("F:*",)),
+        ToolSpec("fetch", SafetyLevel.READ_ONLY, ResourceVector(0.2, 1.0, 30, 0), 3.0,
+                 writes=("F:*",)),
         ToolSpec("grep", SafetyLevel.READ_ONLY, ResourceVector(1.0, 4.0, 50, 0), 1.5),
-        ToolSpec("read", SafetyLevel.READ_ONLY, ResourceVector(0.3, 2.0, 20, 0), 0.8),
-        ToolSpec("parse", SafetyLevel.READ_ONLY, ResourceVector(1.0, 2.0, 5, 0), 2.0),
-        ToolSpec("edit", SafetyLevel.STAGED_WRITE, ResourceVector(0.5, 1.0, 10, 0), 1.2),
-        ToolSpec("test", SafetyLevel.STAGED_WRITE, ResourceVector(2.0, 6.0, 30, 0), 8.0),
-        ToolSpec("build", SafetyLevel.STAGED_WRITE, ResourceVector(3.0, 8.0, 60, 0), 10.0),
+        ToolSpec("read", SafetyLevel.READ_ONLY, ResourceVector(0.3, 2.0, 20, 0), 0.8,
+                 reads=("F:*",)),
+        ToolSpec("parse", SafetyLevel.READ_ONLY, ResourceVector(1.0, 2.0, 5, 0), 2.0,
+                 reads=("F:*",)),
+        ToolSpec("edit", SafetyLevel.STAGED_WRITE, ResourceVector(0.5, 1.0, 10, 0), 1.2,
+                 writes=("F:*",)),
+        ToolSpec("test", SafetyLevel.STAGED_WRITE, ResourceVector(2.0, 6.0, 30, 0), 8.0,
+                 reads=("F:*",)),
+        ToolSpec("build", SafetyLevel.STAGED_WRITE, ResourceVector(3.0, 8.0, 60, 0), 10.0,
+                 writes=("E:built",)),
         ToolSpec("pip_install", SafetyLevel.STAGED_WRITE,
-                 ResourceVector(1.0, 2.0, 40, 0), 8.0, transformed="pip_download"),
-        ToolSpec("pip_download", SafetyLevel.READ_ONLY, ResourceVector(0.5, 1.0, 40, 0), 5.0),
-        ToolSpec("session_init", SafetyLevel.PREP_ONLY, ResourceVector(0.5, 1.0, 5, 0), 1.0),
-        ToolSpec("env_warmup", SafetyLevel.PREP_ONLY, ResourceVector(1.0, 2.0, 10, 0), 2.0),
-        ToolSpec("deploy", SafetyLevel.NON_SPECULATIVE, ResourceVector(1.0, 2.0, 20, 0), 4.0),
+                 ResourceVector(1.0, 2.0, 40, 0), 8.0, transformed="pip_download",
+                 writes=("E:pkg:*",)),
+        ToolSpec("pip_download", SafetyLevel.READ_ONLY, ResourceVector(0.5, 1.0, 40, 0), 5.0,
+                 writes=("F:cache/*",)),
+        ToolSpec("session_init", SafetyLevel.PREP_ONLY, ResourceVector(0.5, 1.0, 5, 0), 1.0,
+                 writes=("E:warm:*",)),
+        ToolSpec("env_warmup", SafetyLevel.PREP_ONLY, ResourceVector(1.0, 2.0, 10, 0), 2.0,
+                 writes=("E:warm:*",)),
+        ToolSpec("deploy", SafetyLevel.NON_SPECULATIVE, ResourceVector(1.0, 2.0, 20, 0), 4.0,
+                 writes=("E:deployed",)),
         # model reasoning step as a pseudo-tool (runs on the accelerator)
         ToolSpec("model_step", SafetyLevel.READ_ONLY, ResourceVector(0.5, 2.0, 0, 1), 2.5),
     ]

@@ -28,7 +28,6 @@ import hashlib
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Union
 
-from repro.core.events import DEFAULT_TOOLS, Event, SafetyLevel, ToolSpec
 from repro.core.sandbox import ABSENT, AgentState, CowView, Sandbox, _TOMBSTONE
 
 
@@ -203,3 +202,39 @@ def execute_tool(tool: str, args: Dict[str, Any], state: StateFacade) -> Dict[st
     if tool == "model_step":
         return {"ok": True}
     raise KeyError(f"unknown tool {tool!r}")
+
+
+# ----------------------------------------------------------------------
+# Dry-run support for the static analyzer (core/analysis.py rule R1).
+# ----------------------------------------------------------------------
+
+# Representative concrete arguments per tool: enough to drive every state
+# access in execute_tool's semantics (the implementations key state touches
+# on arg *presence*, not payload, so any concrete value exercises the same
+# footprint shape).
+SAMPLE_ARGS: Dict[str, Dict[str, Any]] = {
+    "search": {"query": "q"},
+    "visit": {"url": "u"},
+    "fetch": {"url": "u"},
+    "grep": {"pattern": "p"},
+    "read": {"path": "f"},
+    "parse": {"path": "f"},
+    "edit": {"path": "f", "change": "c"},
+    "test": {"target": "f"},
+    "pip_install": {"pkg": "p"},
+    "pip_download": {"pkg": "p"},
+    "session_init": {},
+    "env_warmup": {},
+    "deploy": {},
+    "model_step": {},
+}
+
+
+def dry_run_footprint(tool: str, args: Optional[Dict[str, Any]] = None):
+    """Execute ``tool`` against a throwaway AgentState and return its tracked
+    per-call ``(reads, write overlay)`` footprint.  Raises KeyError for tools
+    without an executor implementation (the analyzer skips those)."""
+    fac = StateFacade(AgentState())
+    fac.begin_call()
+    execute_tool(tool, dict(args if args is not None else SAMPLE_ARGS.get(tool, {})), fac)
+    return fac.footprint()

@@ -32,7 +32,7 @@ import heapq
 import itertools
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -165,6 +165,26 @@ class BranchHypothesis:
 
 
 COLD_TOOLS = frozenset({"test", "build", "pip_install"})
+
+
+def barrier_violations(h: BranchHypothesis) -> List[int]:
+    """Node indices of Level-2+ TOOL nodes missing their commit BARRIER.
+
+    The assembly invariant (§4.1, §6.3): every TOOL node whose safety level
+    is STAGED_WRITE or stricter has a BARRIER node as its immediate parent,
+    so staged writes can never leak past an unconfirmed prefix.  The static
+    analyzer (core/analysis.py rule R4) checks this on real assembled beams
+    rather than trusting the builder."""
+    by_idx = {n.idx: n for n in h.nodes}
+    parents = h.parent_map()
+    bad: List[int] = []
+    for n in h.nodes:
+        if n.kind != NodeKind.TOOL or n.level < SafetyLevel.STAGED_WRITE:
+            continue
+        ps = parents.get(n.idx, ())
+        if not any(by_idx[p].kind == NodeKind.BARRIER for p in ps):
+            bad.append(n.idx)
+    return bad
 
 
 @dataclass

@@ -25,11 +25,11 @@ model_service.py (batch latency).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable, List, Sequence
+from typing import Sequence
 
 import numpy as np
 
-from repro.core.events import RESOURCE_DIMS, ResourceVector
+from repro.core.events import ResourceVector
 
 
 @dataclass(frozen=True)

@@ -322,5 +322,34 @@ class ResultStore:
         else:
             self._tools.pop(entry.tool, None)
 
+    # -- sanitizer support ----------------------------------------------
+    def check_integrity(self) -> List[str]:
+        """Cross-check the derived indices against the entry table (runtime
+        sanitizer check S5).  Returns human-readable divergence descriptions
+        (empty = coherent): read-index entries must point at live entries
+        that actually read the key, every live entry must be indexed under
+        each of its read keys, and the per-tool live counts must match."""
+        problems: List[str] = []
+        for nk, keys in self._read_index.items():
+            for key in keys:
+                e = self.entries.get(key)
+                if e is None or not e.valid:
+                    problems.append(f"read_index[{nk!r}] -> dead entry {key!r}")
+                elif nk not in e.reads:
+                    problems.append(
+                        f"read_index[{nk!r}] -> entry {key!r} that never read it")
+        tools: Dict[str, int] = {}
+        for key, e in self.entries.items():
+            if not e.valid:
+                problems.append(f"entries[{key!r}] held while invalid")
+                continue
+            tools[e.tool] = tools.get(e.tool, 0) + 1
+            for nk in e.reads:
+                if key not in self._read_index.get(nk, ()):
+                    problems.append(f"entry {key!r} missing from read_index[{nk!r}]")
+        if tools != self._tools:
+            problems.append(f"tool counts drifted: derived {tools} != cached {self._tools}")
+        return problems
+
     def __len__(self) -> int:
         return len(self.entries)

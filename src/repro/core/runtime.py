@@ -49,6 +49,7 @@ import numpy as np
 import time
 
 from repro.core.admission import _fit_limit, bucket_k, fused_admit, greedy_admit
+from repro.core.analysis import AnalysisError, RuntimeSanitizer, analyze_static
 from repro.core.scoring import tenant_fairness_weights
 from repro.core.events import (
     DEFAULT_TOOLS, RESOURCE_DIMS, Event, ResourceVector, SafetyLevel, ToolSpec,
@@ -219,6 +220,38 @@ class RuntimeConfig:
                                       # on that member, so keep it short
     model_batch_marginal: float = 0.3  # per-extra-member cost fraction of
                                        # interference.batched_step_latency
+    # ---- speculation-safety analysis (core/analysis.py) ----------------
+    analysis: str = "warn"        # construction-time static pass (R1-R3)
+                                  # over (policy, tool table, patterns):
+                                  # "off" skips it, "warn" warnings.warn on
+                                  # error findings, "strict" raises
+                                  # AnalysisError.  The report is kept at
+                                  # ``BPasteRuntime.analysis_report`` either
+                                  # way.  Pure — no RNG, no builder ids —
+                                  # so decisions are untouched.
+    sanitize: bool = False        # runtime sanitizer: every sanitize_every
+                                  # ticks, cross-check the event scheduler's
+                                  # caches (epoch args/memo-key/servability,
+                                  # dirty-set frontiers, counter-group
+                                  # demand/slack, store indices) against
+                                  # fresh recomputation, plus tracked
+                                  # executor footprints vs declared specs on
+                                  # every execution.  Read-only: findings
+                                  # land in ``BPasteRuntime.sanitizer`` and
+                                  # Metrics.sanitize_findings, decisions are
+                                  # bit-identical to sanitize=False.
+    sanitize_every: int = 7       # sampled tick schedule for the sanitizer
+                                  # sweep (footprint checks always run when
+                                  # sanitize is on); prime, so the sample
+                                  # doesn't alias phase-periodic tick shapes
+    race_mask: bool = False       # thread R3's write-conflict detection into
+                                  # shared admission as a mask: when two
+                                  # co-admitted branches' frontier tools
+                                  # declare the same EXACT write key with
+                                  # different tools, the lower-EU branch is
+                                  # de-admitted this pass (report-only
+                                  # detection runs under sanitize without
+                                  # masking)
 
 
 @dataclass
@@ -290,6 +323,13 @@ class Metrics:
     # benchmarks/bench_scheduler.py reports it as us/tick/episode
     sched_ticks: int = 0
     sched_tick_seconds: float = 0.0
+    # speculation-safety sanitizer (RuntimeConfig.sanitize): findings
+    # recorded by the per-tick cross-checks + footprint contract, and
+    # branches de-admitted by the write-race conflict mask
+    # (RuntimeConfig.race_mask).  Both stay 0 with the knobs off, so the
+    # event≡dense and pinned-metric comparisons are unaffected.
+    sanitize_findings: int = 0
+    race_masked: int = 0
 
     def summary(self) -> Dict[str, float]:
         lat = np.array(self.episode_latencies) if self.episode_latencies else np.zeros(1)
@@ -359,6 +399,8 @@ class Metrics:
                 float(np.mean(self.model_queue_delay_samples))
                 if self.model_queue_delay_samples else 0.0
             ),
+            "sanitize_findings": self.sanitize_findings,
+            "race_masked": self.race_masked,
         }
 
     def per_tenant(self) -> Dict[int, Dict[str, float]]:
@@ -401,6 +443,10 @@ class BPasteRuntime:
             raise ValueError(
                 f"RuntimeConfig.scheduler must be 'event' or 'dense', "
                 f"got {rcfg.scheduler!r}")
+        if rcfg.analysis not in ("off", "warn", "strict"):
+            raise ValueError(
+                f"RuntimeConfig.analysis must be 'off', 'warn' or 'strict', "
+                f"got {rcfg.analysis!r}")
         self.machine = machine
         self.policy = policy
         self.rcfg = rcfg
@@ -479,6 +525,25 @@ class BPasteRuntime:
             max_batch=rcfg.model_max_batch, linger=rcfg.model_batch_linger,
             marginal=rcfg.model_batch_marginal, metrics=self.metrics,
         )
+        # construction-time static safety pass (core/analysis.py R1-R3):
+        # pure — dry-runs on throwaway state, no RNG, no hypothesis ids —
+        # so it cannot perturb a single scheduling decision.  R4 (barrier
+        # placement) needs assembled beams and runs via the CLI instead.
+        if rcfg.analysis != "off":
+            self.analysis_report = analyze_static(policy, engine)
+            errs = self.analysis_report.errors()
+            if errs:
+                if rcfg.analysis == "strict":
+                    raise AnalysisError(self.analysis_report)
+                import warnings
+                warnings.warn(
+                    f"speculation-safety analysis found {len(errs)} error "
+                    f"finding(s):\n" + "\n".join(f"  {f}" for f in errs),
+                    RuntimeWarning, stacklevel=2)
+        else:
+            self.analysis_report = None
+        self.sanitizer = (RuntimeSanitizer(self, every=rcfg.sanitize_every)
+                          if rcfg.sanitize else None)
 
     # ==================================================================
     def run(self) -> Metrics:
@@ -633,6 +698,8 @@ class BPasteRuntime:
         def done(sim: Simulator, job: SimJob):
             fac = StateFacade(es.state)
             result = execute_tool(tool, args, fac)
+            if self.sanitizer is not None:
+                self.sanitizer.check_footprint(tool, fac, f"auth e{es.ep.eid}")
             es.last_writes = set(fac.writes)
             if spec.level >= SafetyLevel.STAGED_WRITE:
                 es.state.bump()
@@ -990,7 +1057,7 @@ class BPasteRuntime:
         self._mark_dirty(es)
         cl = max(self.engine.context_len, 1)
         tail = tuple(signature(e) for e in hist[-cl:])
-        tails = {tail[-l:] for l in range(1, len(tail) + 1)} or {()}
+        tails = {tail[-n:] for n in range(1, len(tail) + 1)} or {()}
         if self.builder.assembly == "tree":
             pred_pairs = self.engine.predict(hist, top=self.rcfg.beam_k,
                                              backoff="merge")
@@ -1076,6 +1143,9 @@ class BPasteRuntime:
             except KeyError:
                 pass
             else:
+                if self.sanitizer is not None:
+                    self.sanitizer.check_footprint(
+                        nr.run_tool, fac, f"commit e{es.ep.eid} h{hr.hyp.hid}")
                 # the replay just validated this result against the LIVE
                 # state — publish it for every tenant
                 self._publish_result(fac, nr.run_tool, nr.resolved_args,
@@ -1260,6 +1330,8 @@ class BPasteRuntime:
                 if fr:
                     pool.append((es, hr, fr))
         self._admit_shared(pool, n_active)
+        if self.rcfg.race_mask or self.sanitizer is not None:
+            self._check_write_races(pool)
         self._launch_nodes()
 
     def _phase4_event(self):
@@ -1277,6 +1349,8 @@ class BPasteRuntime:
         for i in sorted(self._pool_idx):
             pool.extend(self._contrib[i])
         self._admit_shared(pool, self._n_active_tot)
+        if self.rcfg.race_mask or self.sanitizer is not None:
+            self._check_write_races(pool)
         self._launch_nodes_event()
 
     def _rebuild_cache(self, i: int):
@@ -1630,7 +1704,60 @@ class BPasteRuntime:
             else:
                 hr.meta_admitted = False
 
-    def _launch_frontier(self, es: EpisodeState, hr: HypRun) -> List[int]:
+    def _check_write_races(self, pool: List[Tuple[EpisodeState, HypRun, List[int]]]):
+        """R3 (cross-branch write–write races) threaded into the shared
+        admission pass: walk the just-admitted candidates in launch order
+        (descending EU, then hid — the order ``_launch_nodes`` starts them)
+        and track the EXACT (non-glob) write keys their frontier tools
+        declare.  Two different tools claiming one key in the same pass
+        would stage divergent writes to the same state.  With ``race_mask``
+        on, the later (lower-EU) claimant is de-admitted this pass — it
+        re-enters the pool next tick once the winner's write has landed;
+        under ``sanitize`` alone the conflict is reported but not masked.
+        Same-tool claims are benign (identical deterministic writes; true
+        duplicates dedup through the result store) and glob overlaps
+        usually hit distinct keys — neither is flagged, which is what keeps
+        the default config race-silent."""
+        admitted = [(es, hr, fr) for es, hr, fr in pool
+                    if getattr(hr, "meta_admitted", False)]
+        if len(admitted) < 2:
+            return
+        admitted.sort(key=lambda t: (-t[1].eu, t[1].hyp.hid))
+        claimed: Dict[str, str] = {}      # exact write key -> claiming tool
+        for es, hr, fr in admitted:
+            keys: List[Tuple[str, str]] = []
+            conflict = None
+            for i in fr:
+                nr = hr.node_runs[i]
+                if nr.node.kind != NodeKind.TOOL:
+                    continue
+                spec = self.tools.get(nr.run_tool)
+                if spec is None:
+                    continue
+                for pat in spec.writes:
+                    if any(c in pat for c in "*?["):
+                        continue          # glob: keys usually distinct
+                    keys.append((pat, nr.run_tool))
+                    prev = claimed.get(pat)
+                    if conflict is None and prev is not None and prev != nr.run_tool:
+                        conflict = (pat, prev, nr.run_tool)
+            if conflict is not None:
+                key, winner, loser = conflict
+                if self.sanitizer is not None:
+                    self.sanitizer._add(
+                        "R3-write-race", "warn",
+                        f"admit e{es.ep.eid} h{hr.hyp.hid}",
+                        f"co-admitted {loser!r} writes {key!r} already "
+                        f"claimed by {winner!r} this pass")
+                if self.rcfg.race_mask:
+                    hr.meta_admitted = False
+                    self.metrics.race_masked += 1
+                    continue              # masked branch claims nothing
+            for key, tool in keys:
+                claimed.setdefault(key, tool)
+
+    def _launch_frontier(self, es: EpisodeState, hr: HypRun,
+                         settle_warm: bool = True) -> List[int]:
         """Indices of every launchable (TOOL/PREP) node on the branch's
         ready frontier: pending nodes whose executable ancestors along the
         root path are all done/reused.  A running or blocked node gates only
@@ -1641,7 +1768,12 @@ class BPasteRuntime:
         nodes always bound (reasoning is not tool-speculable here);
         NON_SPECULATIVE bounds; beyond a model-originated-args TOOL node
         only Level-0 PREP nodes may run (§7 Level 0: warm-up needs no
-        arguments)."""
+        arguments).
+
+        ``settle_warm=False`` is the SIDE-EFFECT-FREE variant for the
+        runtime sanitizer: already-warm pending preps are treated as settled
+        without mutating their status, so a verification walk returns what
+        the scheduler's walk would have cached without changing anything."""
         allow_staged = self.policy.max_level >= SafetyLevel.STAGED_WRITE
         out: List[int] = []
         open_: Dict[int, bool] = {}      # subtree not bounded above
@@ -1667,12 +1799,15 @@ class BPasteRuntime:
             if kind == NodeKind.TOOL and nr.node.missing_args:
                 open_[i], ready[i], preponly[i] = True, rd, True
                 continue
-            if kind == NodeKind.PREP and nr.status == "pending"                     and nr.run_tool == "env_warmup" and self.sim.now <= es.warm_until:
-                nr.status = "reused"          # already warm — prep is a no-op
-            if nr.status == "pending" and rd and (kind == NodeKind.PREP or not po):
+            status = nr.status
+            if kind == NodeKind.PREP and status == "pending"                     and nr.run_tool == "env_warmup" and self.sim.now <= es.warm_until:
+                status = "reused"             # already warm — prep is a no-op
+                if settle_warm:
+                    nr.status = status
+            if status == "pending" and rd and (kind == NodeKind.PREP or not po):
                 out.append(i)
             open_[i] = True
-            ready[i] = rd and nr.status in ("done", "reused")
+            ready[i] = rd and status in ("done", "reused")
         return out
 
     def _launch_nodes(self):
@@ -1805,6 +1940,10 @@ class BPasteRuntime:
                 nr2.result = execute_tool(nr2.run_tool, nr2.resolved_args, fac)
             except KeyError:
                 nr2.result = None
+            else:
+                if self.sanitizer is not None:
+                    self.sanitizer.check_footprint(
+                        nr2.run_tool, fac, f"spec e{es.ep.eid} h{hr.hyp.hid}.{i}")
             hr.sandbox.record(Event("tool", nr2.run_tool, nr2.resolved_args,
                                     nr2.result, job.started_at or 0.0, sim.now,
                                     es.ep.eid))
@@ -1844,6 +1983,11 @@ class BPasteRuntime:
         self._phase3()
         self._phase4()
         self._qos_tick(sim)
+        if self.sanitizer is not None:
+            # after the phases: the dirty set now holds exactly the episodes
+            # whose caches are legitimately pending a rebuild, so every
+            # OTHER episode's cached frontier must match a fresh walk
+            self.sanitizer.on_tick()
         self.metrics.sched_ticks += 1
         self.metrics.sched_tick_seconds += time.perf_counter() - t0
 

@@ -31,8 +31,14 @@ class EligibilityPolicy:
 
     def __post_init__(self):
         for name, spec in self.tools.items():
-            if spec.transformed and name not in self.transforms:
-                self.transforms[name] = spec.transformed
+            if not spec.transformed or name in self.transforms:
+                continue
+            # An explicit operator override to NON_SPECULATIVE is a ban:
+            # do NOT auto-install the spec's transform for it, or the tool
+            # keeps speculating through the degraded variant anyway.
+            if self.overrides.get(name) == SafetyLevel.NON_SPECULATIVE:
+                continue
+            self.transforms[name] = spec.transformed
 
     def level(self, tool: str) -> SafetyLevel:
         if tool in self.overrides:
@@ -41,22 +47,28 @@ class EligibilityPolicy:
         return spec.level if spec else SafetyLevel.NON_SPECULATIVE
 
     def eligible(self, tool: str) -> bool:
-        lvl = self.level(tool)
-        if lvl == SafetyLevel.NON_SPECULATIVE:
-            return tool in self.transforms
-        return lvl <= self.max_level
+        """True iff the tool can speculate in *some* form.  Definitionally
+        ``speculative_form(tool) is not None`` — keeping the two in sync by
+        construction (they drifted before: a transform-degradable staged
+        write under a READ_ONLY policy was form-runnable but "ineligible")."""
+        return self.speculative_form(tool) is not None
 
     def speculative_form(self, tool: str) -> Optional[Tuple[str, bool]]:
         """(tool_to_run, transformed?) for speculative execution, or None if
-        ineligible.  Level-2 tools above max_level degrade to their
-        transformed variant when one exists."""
+        ineligible.  Tools above max_level degrade to their transformed
+        variant when one exists *and the transform target itself clears the
+        policy*.  An explicit NON_SPECULATIVE override is an operator ban
+        and wins over any transform."""
+        if self.overrides.get(tool) == SafetyLevel.NON_SPECULATIVE:
+            return None
         lvl = self.level(tool)
-        if lvl <= min(self.max_level, SafetyLevel.READ_ONLY):
-            return (tool, False)
-        if lvl <= self.max_level and lvl == SafetyLevel.STAGED_WRITE:
-            return (tool, False)          # allowed, but sandbox + barrier
-        if tool in self.transforms:
-            return (self.transforms[tool], True)
+        if lvl != SafetyLevel.NON_SPECULATIVE and lvl <= self.max_level:
+            return (tool, False)          # Level-2 ⇒ sandbox + barrier
+        t2 = self.transforms.get(tool)
+        if t2 is not None:
+            lvl2 = self.level(t2)
+            if lvl2 != SafetyLevel.NON_SPECULATIVE and lvl2 <= self.max_level:
+                return (t2, True)
         return None
 
     def servable(self, tool: str) -> Optional[str]:
@@ -64,16 +76,20 @@ class EligibilityPolicy:
         cross-episode result store (memo.py):
 
           "direct" — PREP_ONLY / READ_ONLY: the result is replayable by
-                     definition, serve it as-is;
+                     definition, serve it as-is (only when the policy admits
+                     speculation at that level at all — a stored result only
+                     exists because some runtime speculated the action);
           "replay" — STAGED_WRITE: serve by replaying the stored write
                      overlay through the commit barrier onto the live state
                      (version bump included), allowed only when the operator
                      admits staged speculation at all;
-          None     — NON_SPECULATIVE (and staged writes under a stricter
-                     policy): always re-execute authoritatively.
+          None     — NON_SPECULATIVE (and anything above max_level): always
+                     re-execute authoritatively.
         """
+        if self.overrides.get(tool) == SafetyLevel.NON_SPECULATIVE:
+            return None
         lvl = self.level(tool)
-        if lvl <= SafetyLevel.READ_ONLY:
+        if lvl <= SafetyLevel.READ_ONLY and lvl <= self.max_level:
             return "direct"
         if lvl == SafetyLevel.STAGED_WRITE and self.max_level >= SafetyLevel.STAGED_WRITE:
             return "replay"

@@ -227,6 +227,17 @@ class Simulator:
     def slack(self) -> np.ndarray:
         return np.maximum(self.cap - self.running_demand(), 0.0)
 
+    def dense_running_demand(self, *, speculative: Optional[bool] = None) -> np.ndarray:
+        """Brute-force O(n) re-sum over ``self.running`` — the pre-event
+        implementation of :meth:`running_demand`.  The runtime sanitizer
+        (core/analysis.py check S3) diffs the counter-group value against
+        this on a sampled schedule; it is NOT for hot paths."""
+        tot = np.zeros(RESOURCE_DIMS)
+        for job in self.running.values():
+            if speculative is None or job.speculative == speculative:
+                tot += job.demand
+        return tot
+
     # ------------------------------------------------------------------
     # event-queue internals
     # ------------------------------------------------------------------

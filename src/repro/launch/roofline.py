@@ -22,7 +22,6 @@ All arrays are the per-device shards (already divided by mesh extents).
 """
 from __future__ import annotations
 
-import math
 from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig

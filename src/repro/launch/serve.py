@@ -15,9 +15,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.interference import Machine
 from repro.core.patterns import PatternEngine
-from repro.core.runtime import RuntimeConfig, run_mode
 from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episodes
 from repro.models import model as model_mod
 from repro.serving.engine import ServingEngine

@@ -1,7 +1,7 @@
 """GQA attention block: init + train/prefill/decode application."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

@@ -1,7 +1,6 @@
 """Shared model components: RMSNorm, RoPE, inits, dtype policy."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.core.hypothesis import BranchHypothesis, NodeKind
 from repro.serving.engine import ServingEngine
 

@@ -5,7 +5,7 @@ PartitionSpec tree shards it; ZeRO-style sharding just extends the specs.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,8 @@ class AdamWConfig(NamedTuple):
 
 
 def init_opt_state(params) -> dict:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),
@@ -41,7 +42,7 @@ def lr_at(step: jnp.ndarray, c: AdamWConfig) -> jnp.ndarray:
 
 def global_norm(tree) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
 
 
 def apply_updates(params, grads, opt_state, c: AdamWConfig):

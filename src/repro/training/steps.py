@@ -1,8 +1,6 @@
 """jit-able train / serve step functions (the units the dry-run lowers)."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

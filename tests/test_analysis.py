@@ -1,0 +1,470 @@
+"""ISSUE 7: speculation-safety static analyzer + runtime sanitizer.
+
+Three claims under test:
+
+* **Clean defaults** — the default policy / tool registry / workload /
+  pattern tables produce ZERO findings, statically (R1-R4, the CLI path)
+  and at runtime (S1-S5 on a seeded serving run under ``sanitize=True``).
+* **Every rule fires** — each static rule and each sanitizer check has a
+  deliberately broken fixture that triggers exactly that rule id (no
+  cross-talk, no false positives from the other rules).
+* **Observer effect: none** — ``sanitize=True`` changes wall time only:
+  the full metrics summary is bit-identical to ``sanitize=False`` on the
+  pinned serving config (TIMING_KEYS excepted), and ``race_mask`` stays a
+  separate, explicit opt-in.
+"""
+from dataclasses import replace
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.analysis import main as analysis_cli
+from repro.core.analysis import (
+    AnalysisError,
+    AnalysisReport,
+    RuntimeSanitizer,
+    _patterns_overlap,
+    analyze_static,
+    check_barriers,
+    check_footprints,
+    check_nonspec_reachability,
+    check_write_races,
+)
+from repro.core.events import (
+    DEFAULT_TOOLS, RESOURCE_DIMS, ResourceVector, SafetyLevel,
+)
+from repro.core.executor import AgentState, StateFacade, dry_run_footprint
+from repro.core.hypothesis import BranchHypothesis, Node, NodeKind
+from repro.core.patterns import PatternEngine
+from repro.core.runtime import BPasteRuntime, RuntimeConfig
+from repro.core.safety import FULL_POLICY, EligibilityPolicy
+from repro.core.workload import (
+    WorkloadConfig, episodes_to_traces, make_episodes,
+)
+
+# wall-time-derived summary keys (same convention as test_event_scheduler)
+TIMING_KEYS = {"sched_us_per_admit", "sched_us_per_tick"}
+
+
+@pytest.fixture(scope="module")
+def engine():
+    train = make_episodes(WorkloadConfig(seed=1, n_episodes=20))
+    return PatternEngine(context_len=2, min_support=3).fit(
+        episodes_to_traces(train))
+
+
+class _StubEngine:
+    """Pattern tables with exactly the reachable tools a fixture needs."""
+
+    def __init__(self, tools):
+        self.patterns = [SimpleNamespace(tool=t) for t in tools]
+
+
+def _serving_rt(engine, **rcfg_kw):
+    eps = make_episodes(WorkloadConfig(seed=42, n_episodes=8,
+                                       arrival_stagger=2.0,
+                                       shared_frac=0.5, shared_pool=2))
+    rcfg = RuntimeConfig(seed=7, max_concurrent_episodes=4,
+                         model_max_batch=4, **rcfg_kw)
+    return BPasteRuntime(eps, engine, rcfg=rcfg)
+
+
+# ======================================================================
+# clean defaults
+# ======================================================================
+
+def test_default_config_is_clean_statically(engine):
+    """Acceptance gate: R1-R3 on the default policy + mined tables, R4 on
+    real assembled beams — zero findings."""
+    from repro.analysis import _build_beams
+    traces = episodes_to_traces(make_episodes(
+        WorkloadConfig(seed=1, n_episodes=20)))
+    hyps = _build_beams(engine, traces)
+    report = analyze_static(FULL_POLICY, engine, hyps)
+    assert report.ok, report.render()
+    assert report.meta["barrier_checked_hyps"] > 0
+
+
+def test_cli_exits_zero_on_defaults(capsys):
+    assert analysis_cli([]) == 0
+    assert "clean (0 findings)" in capsys.readouterr().out
+
+
+def test_sanitized_serving_run_is_clean_and_bit_identical(engine):
+    """Seeded serving config under ``sanitize=True``: the sanitizer fires on
+    its sampled schedule and finds nothing, and the summary (decisions,
+    latencies, memo traffic — everything but wall time) is bit-identical to
+    the ``sanitize=False`` run."""
+    rt = _serving_rt(engine, sanitize=True, sanitize_every=3)
+    a = rt.run().summary()
+    assert rt.sanitizer is not None
+    assert rt.sanitizer.findings == [], rt.sanitizer.report.render()
+    assert rt.sanitizer._tick_no > 3          # the schedule actually sampled
+    b = _serving_rt(engine, sanitize=False).run().summary()
+    assert b["sanitize_findings"] == 0 and b["race_masked"] == 0
+    keys = (set(a) | set(b)) - TIMING_KEYS
+    diffs = {k: (a.get(k), b.get(k)) for k in keys if a.get(k) != b.get(k)}
+    assert not diffs, diffs
+
+
+# ======================================================================
+# R1: policy–footprint consistency
+# ======================================================================
+
+def test_r1_fires_on_misdeclared_read_only_writer():
+    """'edit' relabeled READ_ONLY with an empty write declaration: its
+    tracked writes are undeclared at a level that may run un-sandboxed."""
+    tools = dict(DEFAULT_TOOLS)
+    tools["edit"] = replace(tools["edit"], level=SafetyLevel.READ_ONLY,
+                            reads=(), writes=())
+    report = check_footprints(EligibilityPolicy(tools=tools))
+    hits = report.by_rule("R1-footprint")
+    assert {f.rule for f in report.findings} == {"R1-footprint"}
+    assert any(f.site == "edit" and f.severity == "error" for f in hits)
+
+
+def test_r1_staged_misdeclaration_is_warn_not_error():
+    tools = dict(DEFAULT_TOOLS)
+    tools["edit"] = replace(tools["edit"], reads=(), writes=())
+    report = check_footprints(EligibilityPolicy(tools=tools))
+    edit_hits = [f for f in report.by_rule("R1-footprint") if f.site == "edit"]
+    assert edit_hits and all(f.severity == "warn" for f in edit_hits)
+
+
+def test_r1_unknown_tool_is_info():
+    tools = dict(DEFAULT_TOOLS)
+    tools["teleport"] = replace(tools["search"], name="teleport")
+    report = check_footprints(EligibilityPolicy(tools=tools))
+    assert [f.severity for f in report.findings] == ["info"]
+    assert report.findings[0].site == "teleport"
+
+
+def test_dry_run_footprint_tracks_both_directions():
+    reads, writes = dry_run_footprint("edit")
+    assert any(k.startswith("F:") for k in writes)
+    reads, writes = dry_run_footprint("read")
+    assert any(k.startswith("F:") for k in reads) and not writes
+
+
+# ======================================================================
+# R2: non-speculative reachability
+# ======================================================================
+
+def test_r2_fires_on_banned_reachable_tool():
+    pol = EligibilityPolicy(
+        overrides={"parse": SafetyLevel.NON_SPECULATIVE})
+    report = check_nonspec_reachability(pol, _StubEngine(["parse", "search"]))
+    assert [f.rule for f in report.findings] == ["R2-nonspec-reach"]
+    assert report.findings[0].site == "parse"
+    assert report.findings[0].severity == "warn"
+
+
+def test_r2_unregistered_pattern_tool_is_error():
+    report = check_nonspec_reachability(FULL_POLICY,
+                                        _StubEngine(["no_such_tool"]))
+    assert [f.severity for f in report.findings] == ["error"]
+
+
+def test_r2_transformed_tool_is_not_flagged():
+    """pip_install is NON_SPECULATIVE-adjacent but degrades to its dry-run
+    transform, so reachability is fine."""
+    report = check_nonspec_reachability(
+        EligibilityPolicy(max_level=SafetyLevel.READ_ONLY),
+        _StubEngine(["pip_install"]))
+    assert report.ok, report.render()
+
+
+# ======================================================================
+# R3: cross-branch write–write races
+# ======================================================================
+
+def test_r3_fires_on_exact_key_collision():
+    tools = dict(DEFAULT_TOOLS)
+    tools["rebuild"] = replace(tools["build"], name="rebuild")
+    pol = EligibilityPolicy(tools=tools)
+    report = check_write_races(pol, _StubEngine(["build", "rebuild"]))
+    hits = report.by_rule("R3-write-race")
+    assert len(hits) == 1 and hits[0].site == "build+rebuild"
+    assert ["build", "rebuild", "E:built", "E:built"] in \
+        report.meta["write_conflicts"]
+
+
+def test_r3_glob_overlap_is_matrix_only(engine):
+    """Default tables: edit/visit both cover F:* — a may-overlap matrix
+    entry, NOT a finding (distinct keys under one glob are not a race)."""
+    report = check_write_races(FULL_POLICY, engine)
+    assert report.ok, report.render()
+    assert any({"edit", "visit"} == {c[0], c[1]}
+               for c in report.meta["write_conflicts"])
+
+
+def test_pattern_overlap_predicate():
+    assert _patterns_overlap("E:built", "E:built")
+    assert not _patterns_overlap("E:built", "E:pkg")
+    assert _patterns_overlap("F:cache/x", "F:cache/*")
+    assert not _patterns_overlap("E:built", "F:*")
+    assert _patterns_overlap("F:*", "F:cache/*")
+
+
+# ======================================================================
+# R4: commit-barrier placement
+# ======================================================================
+
+def _bare_staged_hyp(hid=99):
+    n0 = Node(0, NodeKind.TOOL, "search", SafetyLevel.READ_ONLY,
+              DEFAULT_TOOLS["search"].rho, 1.0)
+    n1 = Node(1, NodeKind.TOOL, "edit", SafetyLevel.STAGED_WRITE,
+              DEFAULT_TOOLS["edit"].rho, 1.0)
+    return BranchHypothesis(hid=hid, nodes=[n0, n1], edges=[(0, 1)],
+                            q=0.5, context_key=())
+
+
+def test_r4_fires_on_missing_barrier():
+    report = check_barriers([_bare_staged_hyp()])
+    assert [f.rule for f in report.findings] == ["R4-barrier"]
+    assert report.findings[0].site == "hyp 99 node 1"
+    assert report.findings[0].severity == "error"
+    assert report.meta["barrier_checked_hyps"] == 1
+
+
+def test_r4_clean_on_barriered_hyp():
+    n0 = Node(0, NodeKind.BARRIER, "barrier", SafetyLevel.PREP_ONLY,
+              ResourceVector(), 0.0)
+    n1 = Node(1, NodeKind.TOOL, "edit", SafetyLevel.STAGED_WRITE,
+              DEFAULT_TOOLS["edit"].rho, 1.0)
+    h = BranchHypothesis(hid=1, nodes=[n0, n1], edges=[(0, 1)],
+                         q=0.5, context_key=())
+    assert check_barriers([h]).ok
+
+
+# ======================================================================
+# constructor wiring (RuntimeConfig.analysis)
+# ======================================================================
+
+def _broken_policy():
+    tools = dict(DEFAULT_TOOLS)
+    tools["edit"] = replace(tools["edit"], level=SafetyLevel.READ_ONLY,
+                            reads=(), writes=())
+    return EligibilityPolicy(tools=tools)
+
+
+def test_constructor_strict_raises_on_error_findings(engine):
+    eps = make_episodes(WorkloadConfig(seed=42, n_episodes=2))
+    with pytest.raises(AnalysisError) as ei:
+        BPasteRuntime(eps, engine, policy=_broken_policy(),
+                      rcfg=RuntimeConfig(analysis="strict"))
+    assert ei.value.report.by_rule("R1-footprint")
+
+
+def test_constructor_warn_warns_and_records(engine):
+    eps = make_episodes(WorkloadConfig(seed=42, n_episodes=2))
+    with pytest.warns(RuntimeWarning, match="speculation-safety analysis"):
+        rt = BPasteRuntime(eps, engine, policy=_broken_policy(),
+                           rcfg=RuntimeConfig(analysis="warn"))
+    assert rt.analysis_report is not None
+    assert rt.analysis_report.errors()
+
+
+def test_constructor_off_skips_analysis(engine):
+    eps = make_episodes(WorkloadConfig(seed=42, n_episodes=2))
+    rt = BPasteRuntime(eps, engine, policy=_broken_policy(),
+                       rcfg=RuntimeConfig(analysis="off"))
+    assert rt.analysis_report is None
+    with pytest.raises(ValueError):
+        BPasteRuntime(eps, engine, rcfg=RuntimeConfig(analysis="loud"))
+
+
+def test_default_runtime_construction_is_warning_free(engine):
+    import warnings
+    eps = make_episodes(WorkloadConfig(seed=42, n_episodes=2))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # any warning -> test failure
+        rt = BPasteRuntime(eps, engine)
+    assert rt.analysis_report is not None and rt.analysis_report.ok
+
+
+# ======================================================================
+# runtime sanitizer: tamper fixtures (S1-S5)
+# ======================================================================
+
+def _mid_run_rt(engine, max_steps=4000, want=lambda rt: True):
+    """Drive a sanitized serving run event-by-event until ``want`` is
+    satisfied mid-flight (active branches, populated caches), then hand the
+    live runtime to a tamper fixture."""
+    rt = _serving_rt(engine, sanitize=True, sanitize_every=10 ** 9)
+    rt._launch_wave()
+    rt.sim.tick(rt.sim)              # mirror Simulator.run's step/tick loop
+    for _ in range(max_steps):
+        if not rt.sim.step():
+            break
+        rt.sim.tick(rt.sim)
+        if want(rt):
+            return rt
+    raise AssertionError("mid-run predicate never satisfied")
+
+
+def _active_cached_node(rt):
+    for es in rt.episodes:
+        for hr in es.hyp_runs:
+            if hr.status != "active":
+                continue
+            for i, nr in enumerate(hr.node_runs):
+                if nr.args_epoch == es.epoch and nr.args_cache is not None:
+                    return es, hr, i
+    return None
+
+
+def test_s1_fires_on_tampered_args_cache(engine):
+    rt = _mid_run_rt(engine, want=lambda rt: _active_cached_node(rt))
+    es, hr, i = _active_cached_node(rt)
+    hr.node_runs[i].args_cache = {"bogus": "tampered"}
+    rt.sanitizer.check_epoch_caches()
+    rules = {f.rule for f in rt.sanitizer.findings}
+    assert rules == {"S1-stale-cache"}, rt.sanitizer.report.render()
+    assert rt.metrics.sanitize_findings > 0
+
+
+def test_s1_fires_on_tampered_memo_key(engine):
+    def has_mkey(rt):
+        return any(nr.mkey_epoch == es.epoch and nr.mkey_cache is not None
+                   for es in rt.episodes for hr in es.hyp_runs
+                   if hr.status == "active" for nr in hr.node_runs)
+    rt = _mid_run_rt(engine, want=has_mkey)
+    for es in rt.episodes:
+        for hr in es.hyp_runs:
+            if hr.status != "active":
+                continue
+            for nr in hr.node_runs:
+                if nr.mkey_epoch == es.epoch and nr.mkey_cache is not None:
+                    nr.mkey_cache = ("bogus", "key")
+    rt.sanitizer.check_epoch_caches()
+    assert {f.rule for f in rt.sanitizer.findings} == {"S1-stale-cache"}
+
+
+def test_s2_fires_on_tampered_frontier_cache(engine):
+    def clean_cached_episode(rt):
+        return [es for es in rt.episodes
+                if es.idx >= 0 and es.idx not in rt._dirty
+                and es.idx in rt._nact]
+    rt = _mid_run_rt(engine, want=clean_cached_episode)
+    es = clean_cached_episode(rt)[0]
+    rt._nact[es.idx] = rt._nact[es.idx] + 1
+    rt.sanitizer.check_dirty_sets()
+    hits = rt.sanitizer.findings
+    assert hits and {f.rule for f in hits} == {"S2-dirty-set"}
+    assert any("active-branch count" in f.detail for f in hits)
+    # marking the episode dirty legitimizes the pending rebuild: no finding
+    rt.sanitizer.report.findings.clear()
+    rt._mark_dirty(es)
+    rt.sanitizer.check_dirty_sets()
+    assert not any(f.site == f"e{es.ep.eid}" for f in rt.sanitizer.findings)
+
+
+def test_s3_fires_on_tampered_counter_group(engine):
+    rt = _mid_run_rt(engine, want=lambda rt: rt.sim.running)
+    rt.sim._groups[b"__tampered__"] = [np.ones(RESOURCE_DIMS), 1, 0]
+    rt.sim._demand_cache.clear()
+    rt.sanitizer.check_demand_counters()
+    assert {f.rule for f in rt.sanitizer.findings} == {"S3-slack-drift"}
+
+
+def test_s4_fires_on_undeclared_runtime_write(engine):
+    rt = _serving_rt(engine, sanitize=True)
+    fac = StateFacade(AgentState())
+    fac.begin_call()
+    fac.write_values["E:rogue"] = 1
+    rt.sanitizer.check_footprint("read", fac, "tamper-test")
+    hits = rt.sanitizer.findings
+    assert [f.rule for f in hits] == ["S4-footprint"]
+    assert hits[0].severity == "error"       # READ_ONLY tool writing
+
+
+def test_s5_fires_on_corrupted_store_index(engine):
+    rt = _serving_rt(engine, sanitize=True)
+    rt.run()
+    rt.sanitizer.report.findings.clear()
+    rt.store._tools["phantom"] = 3
+    rt.sanitizer.check_store_integrity()
+    assert {f.rule for f in rt.sanitizer.findings} == {"S5-store-index"}
+    assert "phantom" in rt.sanitizer.findings[0].detail
+
+
+# ======================================================================
+# race masking (R3 threaded into admission)
+# ======================================================================
+
+def _fake_branch(hid, eu, tool):
+    node = SimpleNamespace(kind=NodeKind.TOOL)
+    nr = SimpleNamespace(node=node, run_tool=tool)
+    hr = SimpleNamespace(meta_admitted=True, eu=eu,
+                         hyp=SimpleNamespace(hid=hid), node_runs=[nr])
+    return (SimpleNamespace(ep=SimpleNamespace(eid=0)), hr, [0])
+
+
+def test_race_mask_deadmits_lower_eu_claimant(engine):
+    tools = dict(DEFAULT_TOOLS)
+    tools["rebuild"] = replace(tools["build"], name="rebuild")
+    eps = make_episodes(WorkloadConfig(seed=42, n_episodes=2))
+    rt = BPasteRuntime(eps, engine, tools=tools,
+                       rcfg=RuntimeConfig(race_mask=True, sanitize=True))
+    winner = _fake_branch(1, eu=2.0, tool="build")
+    loser = _fake_branch(2, eu=1.0, tool="rebuild")
+    rt._check_write_races([loser, winner])
+    assert winner[1].meta_admitted is True
+    assert loser[1].meta_admitted is False
+    assert rt.metrics.race_masked == 1
+    assert any(f.rule == "R3-write-race" for f in rt.sanitizer.findings)
+
+
+def test_race_check_reports_without_masking_under_sanitize(engine):
+    tools = dict(DEFAULT_TOOLS)
+    tools["rebuild"] = replace(tools["build"], name="rebuild")
+    eps = make_episodes(WorkloadConfig(seed=42, n_episodes=2))
+    rt = BPasteRuntime(eps, engine, tools=tools,
+                       rcfg=RuntimeConfig(race_mask=False, sanitize=True))
+    a, b = _fake_branch(1, eu=2.0, tool="build"), \
+        _fake_branch(2, eu=1.0, tool="rebuild")
+    rt._check_write_races([a, b])
+    assert a[1].meta_admitted and b[1].meta_admitted   # report-only
+    assert rt.metrics.race_masked == 0
+    assert any(f.rule == "R3-write-race" for f in rt.sanitizer.findings)
+
+
+def test_same_tool_claims_are_benign(engine):
+    eps = make_episodes(WorkloadConfig(seed=42, n_episodes=2))
+    rt = BPasteRuntime(eps, engine,
+                       rcfg=RuntimeConfig(race_mask=True, sanitize=True))
+    a, b = _fake_branch(1, eu=2.0, tool="build"), \
+        _fake_branch(2, eu=1.0, tool="build")
+    rt._check_write_races([a, b])
+    assert a[1].meta_admitted and b[1].meta_admitted
+    assert rt.metrics.race_masked == 0
+    assert not rt.sanitizer.findings
+
+
+# ======================================================================
+# report plumbing
+# ======================================================================
+
+def test_report_render_json_and_extend():
+    r1 = AnalysisReport()
+    r1.add("R1-footprint", "error", "edit", "boom")
+    r2 = AnalysisReport()
+    r2.add("S5-store-index", "warn", "store", "drift")
+    r2.meta["x"] = 1
+    r1.extend(r2)
+    assert len(r1) == 2 and not r1.ok and r1.meta == {"x": 1}
+    assert "R1-footprint" in r1.render() and "2 finding(s)" in r1.render()
+    js = r1.to_json()
+    assert js["findings"][0]["site"] == "edit" and js["meta"] == {"x": 1}
+
+
+def test_sanitizer_tick_sampling(engine):
+    rt = _serving_rt(engine, sanitize=True, sanitize_every=5)
+    calls = []
+    rt.sanitizer.check_all = lambda: calls.append(rt.sanitizer._tick_no)
+    for _ in range(12):
+        rt.sanitizer.on_tick()
+    assert calls == [5, 10]
+    assert isinstance(rt.sanitizer, RuntimeSanitizer)

@@ -290,6 +290,77 @@ def test_non_speculative_never_eligible_without_transform():
     assert pol.speculative_form("deploy") is None
 
 
+def test_nonspec_override_is_an_operator_ban():
+    """ISSUE 7 satellite: overriding a tool to NON_SPECULATIVE must win over
+    its spec transform.  Before the fix, ``__post_init__`` auto-installed
+    ``pip_install``'s dry-run transform regardless, so the banned tool kept
+    speculating through the degraded variant — the override silently lost."""
+    pol = EligibilityPolicy(
+        overrides={"pip_install": SafetyLevel.NON_SPECULATIVE})
+    assert "pip_install" not in pol.transforms   # auto-install suppressed
+    assert pol.speculative_form("pip_install") is None
+    assert not pol.eligible("pip_install")
+    assert pol.servable("pip_install") is None
+    # ... even when the operator ALSO spelled the transform out explicitly
+    pol2 = EligibilityPolicy(
+        overrides={"pip_install": SafetyLevel.NON_SPECULATIVE},
+        transforms={"pip_install": "pip_download"})
+    assert pol2.speculative_form("pip_install") is None
+    # an unrelated ban leaves pip_install's auto-transform in place
+    pol3 = EligibilityPolicy(overrides={"edit": SafetyLevel.NON_SPECULATIVE})
+    assert pol3.transforms.get("pip_install") == "pip_download"
+
+
+def test_operator_transform_reroutes_nonspec_tool():
+    pol = EligibilityPolicy(transforms={"deploy": "search"})
+    assert pol.speculative_form("deploy") == ("search", True)
+    assert pol.eligible("deploy")
+
+
+_POLICY_TOOLS = sorted(DEFAULT_TOOLS)
+_POLICY_LEVELS = list(SafetyLevel)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    max_level=st.sampled_from(_POLICY_LEVELS),
+    overrides=st.dictionaries(st.sampled_from(_POLICY_TOOLS),
+                              st.sampled_from(_POLICY_LEVELS), max_size=4),
+    transforms=st.dictionaries(st.sampled_from(_POLICY_TOOLS),
+                               st.sampled_from(_POLICY_TOOLS), max_size=3),
+)
+def test_policy_invariants(max_level, overrides, transforms):
+    """ISSUE 7 satellite: EligibilityPolicy invariants over random operator
+    configurations (presets are just three points of this space):
+
+    * ``eligible(t)`` is definitionally ``speculative_form(t) is not None``;
+    * any returned run form clears the policy: its effective level is
+      neither NON_SPECULATIVE nor above ``max_level``, and the
+      ``transformed`` flag is exactly "the run tool differs";
+    * ``servable(t) != None  ⇒  eligible(t)`` (the store never serves a
+      result speculation could not have produced);
+    * ``servable(t) == "replay"  ⇒  requires_sandbox_write(t)``;
+    * a NON_SPECULATIVE override bans both speculation and serving."""
+    pol = EligibilityPolicy(max_level=max_level, overrides=dict(overrides),
+                            transforms=dict(transforms))
+    for tool in _POLICY_TOOLS:
+        form = pol.speculative_form(tool)
+        assert pol.eligible(tool) == (form is not None)
+        if form is not None:
+            run_tool, transformed = form
+            lvl = pol.level(run_tool)
+            assert lvl != SafetyLevel.NON_SPECULATIVE
+            assert lvl <= max_level
+            assert transformed == (run_tool != tool)
+        sv = pol.servable(tool)
+        if sv is not None:
+            assert pol.eligible(tool)
+        if sv == "replay":
+            assert pol.requires_sandbox_write(tool)
+        if overrides.get(tool) == SafetyLevel.NON_SPECULATIVE:
+            assert form is None and sv is None
+
+
 # ======================================================================
 # Pattern engine + hypotheses
 # ======================================================================

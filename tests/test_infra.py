@@ -1,6 +1,5 @@
 """Infrastructure tests: checkpoint, data pipeline, HLO analyzer, serving
 engine, elastic restore (subprocess with a multi-device CPU mesh)."""
-import json
 import os
 import subprocess
 import sys

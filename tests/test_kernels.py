@@ -1,6 +1,5 @@
 """Per-kernel correctness: Pallas (interpret=True) and jnp-chunked
 implementations vs the pure-jnp oracles, swept over shapes and dtypes."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

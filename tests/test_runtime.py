@@ -7,7 +7,6 @@ from repro.core.events import ResourceVector, SafetyLevel
 from repro.core.interference import Machine
 from repro.core.patterns import PatternEngine
 from repro.core.runtime import BPasteRuntime, RuntimeConfig, run_mode
-from repro.core.safety import EligibilityPolicy, FULL_POLICY
 from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episodes
 
 THOR = Machine(ResourceVector(cpu=6, mem_bw=50, io=200, accel=1))
