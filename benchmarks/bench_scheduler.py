@@ -40,10 +40,12 @@ def _mk_hyp(hid, tools, q=0.8):
 
 
 def _sweep_cell(c: int, scheduler: str, engine: PatternEngine,
-                sanitize: bool = False) -> Dict:
+                sanitize: bool = False, warm: bool = True) -> Dict:
     """One synthetic-tenant serving cell: c staggered episodes on a serve
     box, event or dense scheduler, log recording off (the c=1024 event log
-    is a memory blowup — satellite knob record_log=False).  Returns the
+    is a memory blowup — satellite knob record_log=False).  ``warm=False``
+    disables the verified admission warm-start (signature replay + per-hid
+    static-terms cache) for the before/after comparison rows.  Returns the
     µs/tick/episode overhead row."""
     from repro.core.events import ResourceVector
     from repro.core.interference import Machine as _Machine
@@ -52,11 +54,12 @@ def _sweep_cell(c: int, scheduler: str, engine: PatternEngine,
                                        arrival_stagger=0.5,
                                        shared_frac=0.5, shared_pool=4))
     box = _Machine(ResourceVector(cpu=24, mem_bw=200, io=1000, accel=8))
-    tag = "_sanitize" if sanitize else ""
+    tag = ("_sanitize" if sanitize else "") + ("" if warm else "_warmoff")
     t0 = time.perf_counter()
     m = run_mode(eps, engine, "bpaste", box, seed=7,
                  max_concurrent_episodes=c, scheduler=scheduler,
-                 record_log=False, model_max_batch=8, sanitize=sanitize)
+                 record_log=False, model_max_batch=8, sanitize=sanitize,
+                 warm_admit=warm)
     wall = time.perf_counter() - t0
     s = m.summary()
     us_per_tick_ep = s["sched_us_per_tick"] / max(c, 1)
@@ -67,7 +70,11 @@ def _sweep_cell(c: int, scheduler: str, engine: PatternEngine,
                     f"makespan={s['makespan']:.1f}s, wall={wall:.1f}s, "
                     f"budget={TICK_BUDGET_US}us)"),
         "c": c, "scheduler": scheduler, "sanitize": sanitize,
+        "warm_admit": warm,
         "us_per_tick": s["sched_us_per_tick"],
+        "us_per_admit": s.get("sched_us_per_admit", 0.0),
+        "warm_hits": m.sched_warm_hits,
+        "warm_misses": m.sched_warm_misses,
         "ticks": int(s["sched_ticks"]),
         "wall_seconds": wall,
         "sanitize_findings": s.get("sanitize_findings", 0),
@@ -166,6 +173,33 @@ def run(smoke: bool = False) -> List[Dict]:
                      "derived": f"event_vs_dense={speedup:.1f}x "
                                 f"(us/tick/episode)",
                      "c": c, "speedup": speedup})
+
+    # ---- admission warm-start cut (ISSUE 8) ---------------------------
+    # event cells at c>=64 re-run with warm_admit=False: the default rows
+    # above already include the warm-start, so the delta in us/admit (and
+    # us/tick/episode) is exactly what the signed replay + per-hid
+    # static-terms cache buy in the churny big-pool regime
+    warm_cs = [64] if smoke else [64, 256]
+    for c in warm_cs:
+        off = _sweep_cell(c, "event", pe, warm=False)
+        rows.append(off)
+        on = ev.get(c)
+        if on is None:
+            continue
+        cut = off["us_per_admit"] / max(on["us_per_admit"], 1e-9)
+        rows.append({
+            "name": f"scheduler/warm_admit_cut_c{c}",
+            "us_per_call": 0.0,
+            "derived": (f"warmoff_vs_warm={cut:.2f}x us/admit "
+                        f"({off['us_per_admit']:.0f} -> "
+                        f"{on['us_per_admit']:.0f}us; tick/ep "
+                        f"{off['us_per_call']:.1f} -> "
+                        f"{on['us_per_call']:.1f}us; warm hits="
+                        f"{on['warm_hits']}, misses={on['warm_misses']})"),
+            "c": c, "admit_cut": cut,
+            "us_per_admit_warm": on["us_per_admit"],
+            "us_per_admit_off": off["us_per_admit"],
+        })
 
     # ---- runtime-sanitizer overhead (ISSUE 7) -------------------------
     # same c=8 event cell with RuntimeConfig.sanitize=True: the S1-S5

@@ -19,6 +19,10 @@ import os
 import sys
 
 REGRESSION_FACTOR = 2.0
+# the admission warm-start (ISSUE 8) must keep paying for itself: the
+# bench's warmoff/warm us-per-admit ratio at c>=64 dropping to ~1x means
+# the signature replay + static-terms cache stopped hitting
+WARM_CUT_MIN = 1.1
 BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
                         "scheduler_sweep.json")
 
@@ -29,6 +33,14 @@ def check(rows, baseline) -> list:
     budget = baseline.get("budget_us_per_tick_episode", 50.0)
     for r in rows:
         name = r.get("name", "")
+        if name.startswith("scheduler/warm_admit_cut_"):
+            cut = r.get("admit_cut", 0.0)
+            if cut and cut < WARM_CUT_MIN:
+                warnings.append(
+                    f"{name}: warm-start admission cut is only "
+                    f"{cut:.2f}x (expected >= {WARM_CUT_MIN}x) — the "
+                    f"per-hid static-terms cache is no longer paying")
+            continue
         if not name.startswith("scheduler/tick_sweep_") or r.get("skipped"):
             continue
         if "speedup" in name:

@@ -21,7 +21,8 @@ LEVERS = {
 def load(results_dir: str = "results/dryrun") -> List[Dict]:
     recs = []
     for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
-        r = json.load(open(f))
+        with open(f) as fh:
+            r = json.load(fh)
         if r.get("status") == "ok":
             recs.append(r)
     return recs

@@ -22,7 +22,7 @@ import argparse
 import json
 import sys
 
-from repro.core.analysis import AnalysisReport, analyze_static
+from repro.core.analysis import AnalysisReport, analyze_static, exit_code
 from repro.core.hypothesis import HypothesisBuilder
 from repro.core.patterns import PatternEngine
 from repro.core.runtime import BPasteRuntime, RuntimeConfig
@@ -115,9 +115,7 @@ def main(argv=None) -> int:
         else:
             with open(args.json, "w") as fh:
                 fh.write(payload + "\n")
-    if args.strict and report.errors():
-        return 2
-    return 0 if report.ok else 1
+    return exit_code(report, strict=args.strict)
 
 
 if __name__ == "__main__":

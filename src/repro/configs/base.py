@@ -121,7 +121,7 @@ class ModelConfig:
         hd = self.resolved_head_dim
         n = V * D * (1 if self.tie_embeddings else 2)
         per_layer = 0
-        if self.family == "ssm" or (self.family == "hybrid"):
+        if self.family in ("ssm", "hybrid"):
             s = self.ssm
             di = s.d_inner(D)
             nh = s.n_heads(D)

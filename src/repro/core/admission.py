@@ -43,8 +43,8 @@ import numpy as np
 from repro.core.events import RESOURCE_DIMS
 from repro.core.hypothesis import BranchHypothesis
 from repro.core.scoring import (
-    PackedBeam, Scorer, eu_given_admitted, pack_beam, prefix_rho,
-    static_gain_terms,
+    PackedBeam, Scorer, eu_given_admitted, finish_static_terms, pack_beam,
+    prefix_rho, static_gain_terms, static_raw_terms,
 )
 
 
@@ -165,6 +165,28 @@ def bucket_k(n: int, k_max: int) -> int:
     return b
 
 
+def admission_signature(hids, slack, budget, auth_rho, weights, memo_masks,
+                        memo_rho, model_delay) -> tuple:
+    """Byte-exact signature of every input one shared-admission pass is a
+    function of.  ``greedy_admit``/``fused_admit`` are deterministic in
+    (candidate hypotheses, slack, budget, conditioning demand, fairness
+    weights, memo terms, model delay) — hypotheses are immutable after
+    build and globally numbered, so the ordered hid tuple pins them.  Two
+    passes with equal signatures therefore produce identical admitted
+    sets and EU values, which is what lets the runtime's warm-start
+    (``RuntimeConfig.warm_admit``) replay last tick's decision instead of
+    re-running the kernel, with ANY deviation falling back to the full
+    pass."""
+    return (
+        tuple(hids),
+        slack.tobytes(), budget.tobytes(), auth_rho.tobytes(),
+        None if weights is None else weights.tobytes(),
+        None if memo_masks is None else memo_masks.tobytes(),
+        None if memo_rho is None else memo_rho.tobytes(),
+        float(model_delay),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("n_nodes",))
 def admit_beam(
     node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid,
@@ -239,7 +261,8 @@ def admit_beam(
 
 def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
                  idle_window, w=None, memo_mask=None,
-                 rho=None, model_delay=0.0) -> Tuple[np.ndarray, np.ndarray]:
+                 rho=None, model_delay=0.0,
+                 static_terms=None) -> Tuple[np.ndarray, np.ndarray]:
     """The ``admit_beam`` algorithm on the same PackedBeam tables in pure
     numpy — the host-side fast path for tiny beams, where a single XLA
     dispatch (~1 ms on CPU) dwarfs the actual arithmetic.  The Eq. 3
@@ -278,10 +301,19 @@ def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
     q, k_valid, rho, w = q[act], k_valid[act], rho[act], w[act]
     if memo_mask is not None:
         memo_mask = memo_mask[act]
-    l_solo, l_exec, delta_o, delta_u = static_gain_terms(
-        lat, prob, mask, pmask, adj, idle_window, N,
-        memo_mask=memo_mask, model_delay=model_delay, xp=np,
-    )
+    if static_terms is None:
+        l_solo, l_exec, delta_o, delta_u = static_gain_terms(
+            lat, prob, mask, pmask, adj, idle_window, N,
+            memo_mask=memo_mask, model_delay=model_delay, xp=np,
+        )
+    else:
+        # warm-cached raw terms (full-K arrays, see _cached_static_terms):
+        # only the per-tick memo mask / model delay still need folding in
+        s_solo, s_pref, s_raw = static_terms
+        l_solo, l_exec, delta_o, delta_u = finish_static_terms(
+            s_solo[act], s_pref[act], s_raw[act], idle_window,
+            memo_mask=memo_mask, model_delay=model_delay,
+        )
     # Second prune: ΔI ≥ 0 only ever subtracts, so q·(ΔO+λΔU)·k_valid·w
     # is a static per-row EU ceiling — rows at/below 0 can never clear the
     # eu > 0 eligibility bar.
@@ -343,6 +375,38 @@ def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
             elig[pick] = False
 
 
+def _cached_static_terms(hyps, packed: PackedBeam, n_nodes: int,
+                         cache: dict):
+    """Assemble full-K ``(l_solo, lat_pref, raw_delta_u)`` arrays for the
+    host admission path from a caller-owned per-hid cache (caller-bounded,
+    like pack_beam's row_cache): rows already seen replay their cached
+    ``static_raw_terms`` values, unseen rows are computed in one sub-batch
+    and recorded.  Sound because the raw terms are hypothesis-intrinsic and
+    row-independent (see static_raw_terms) — this is what lets the admission
+    warm-start pay even while the pool's MEMBERSHIP churns every tick and
+    the full-signature replay misses.  Padding rows (k ≥ len(hyps)) stay
+    zero; _admit_numpy's k_valid compaction drops them before use."""
+    K, N = packed.node_lat.shape
+    l_solo = np.zeros(K)
+    lat_pref = np.zeros((K, N))
+    raw_du = np.zeros(K)
+    miss = [k for k, h in enumerate(hyps) if h.hid not in cache]
+    if miss:
+        idx = np.asarray(miss)
+        ms, mp, mr = static_raw_terms(
+            packed.node_lat[idx], packed.node_prob[idx],
+            packed.node_mask[idx], packed.prefix_mask[idx],
+            packed.adj[idx], n_nodes)
+        for j, k in enumerate(miss):
+            cache[hyps[k].hid] = (ms[j], mp[j], mr[j])
+    for k, h in enumerate(hyps):
+        s, p, r = cache[h.hid]
+        l_solo[k] = s
+        lat_pref[k] = p
+        raw_du[k] = r
+    return l_solo, lat_pref, raw_du
+
+
 def fused_admit(
     hyps: Sequence[BranchHypothesis],
     scorer: Scorer,
@@ -356,6 +420,7 @@ def fused_admit(
     memo_masks: Optional[np.ndarray] = None,
     memo_rho: Optional[np.ndarray] = None,
     model_delay: float = 0.0,
+    static_cache: Optional[dict] = None,
 ) -> AdmissionResult:
     """Greedy admission via the fused ``admit_beam`` kernel: one XLA dispatch
     per admission pass (vs. one scoring dispatch per *iteration* in
@@ -372,7 +437,9 @@ def fused_admit(
     reason (store contents change every tick; the pack does not).
     ``model_delay`` (the model-step service's expected unlock delay) also
     rides alongside — a traced scalar, so the jit cache is untouched as the
-    batch window moves."""
+    batch window moves.  ``static_cache`` (caller-owned {hid: raw terms},
+    host path only) replays hypothesis-intrinsic static gain terms across
+    passes — see ``_cached_static_terms``."""
     if not len(hyps):
         return AdmissionResult([], {}, [])
     limit = np.minimum(slack, budget)
@@ -391,10 +458,15 @@ def fused_admit(
         rho = rho.copy()
         rho[: len(hyps), :] = np.asarray(memo_rho, float)
     if len(hyps) <= small_beam_threshold:
+        static_terms = None
+        if static_cache is not None:
+            static_terms = _cached_static_terms(
+                hyps, packed, scorer.n_max, static_cache)
         admitted_mask, eu_adm = _admit_numpy(
             packed, np.asarray(authoritative_rho, float), cap,
             np.asarray(limit, float), scorer.lam, scorer.mu, idle_window,
             w=w_pad, memo_mask=mm_pad, rho=rho, model_delay=model_delay,
+            static_terms=static_terms,
         )
     else:
         admitted_mask, eu_adm, _ = admit_beam(

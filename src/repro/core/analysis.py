@@ -136,6 +136,14 @@ class AnalysisReport:
         return len(self.findings)
 
 
+def exit_code(report: AnalysisReport, strict: bool = False) -> int:
+    """Shared CLI exit convention (``repro.analysis``/``repro.staticcheck``):
+    0 clean, 1 findings, 2 under strict when any finding is an error."""
+    if strict and report.errors():
+        return 2
+    return 0 if report.ok else 1
+
+
 class AnalysisError(RuntimeError):
     """Raised by BPasteRuntime under ``analysis="strict"`` on error findings."""
 

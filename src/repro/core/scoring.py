@@ -180,6 +180,48 @@ def _critical_path(adj, lat, mask, n_iters: int):
     return dist.max(axis=1)
 
 
+def static_raw_terms(node_lat, node_prob, node_mask, prefix_mask, adj,
+                     n_nodes: int):
+    """The hypothesis-INTRINSIC half of ``static_gain_terms`` (host/numpy):
+    everything computable from the packed rows alone, before the two
+    per-tick inputs (``memo_mask``, ``model_delay``) are applied.  Rows are
+    independent — no term mixes hypotheses — so values computed for a row in
+    any batch are bit-identical to the same row in any other batch, which is
+    what makes the per-hid admission warm cache sound (hids are globally
+    unique and BranchHypothesis is immutable after build).
+
+    Returns ``(l_solo, lat_pref, raw_delta_u)`` where ``lat_pref`` is the
+    per-node prefix latency row (``node_lat * prefix_mask``, kept unreduced
+    so ``finish_static_terms`` can apply a fresh memo mask) and
+    ``raw_delta_u`` is the post-prefix critical path BEFORE the model-delay
+    clamp."""
+    lat_pref = node_lat * prefix_mask
+    l_solo = lat_pref.sum(axis=1)
+    post_mask = node_mask * (1.0 - prefix_mask)
+    elp = node_lat * node_prob * post_mask
+    dist = elp.copy()
+    for _ in range(n_nodes):               # masked longest-path relaxation
+        via = np.max(adj * (dist[:, :, None] + elp[:, None, :]), axis=1)
+        dist = np.maximum(dist, via * (post_mask > 0))
+    return l_solo, lat_pref, dist.max(axis=1)
+
+
+def finish_static_terms(l_solo, lat_pref, raw_delta_u, idle_window,
+                        memo_mask=None, model_delay=0.0):
+    """Fold the per-tick inputs into cached raw terms (host/numpy): the memo
+    mask drops store-served prefix nodes from the interference-exposed
+    latency, and the model delay clamps ΔU — the only two places per-tick
+    state enters the static terms.  Same arithmetic, same order as the
+    un-cached path, so results are bit-identical by construction."""
+    if memo_mask is None:
+        l_exec = l_solo
+    else:
+        l_exec = (lat_pref * (1.0 - memo_mask)).sum(axis=1)
+    delta_o = np.minimum(l_solo, idle_window)
+    delta_u = np.maximum(raw_delta_u - model_delay, 0.0)
+    return l_solo, l_exec, delta_o, delta_u
+
+
 def static_gain_terms(node_lat, node_prob, node_mask, prefix_mask, adj,
                       idle_window, n_nodes: int, memo_mask=None,
                       model_delay=0.0, xp=jnp):
@@ -206,6 +248,15 @@ def static_gain_terms(node_lat, node_prob, node_mask, prefix_mask, adj,
     Traceable helper shared by ``score_beam`` and the fused admission kernel
     — the latter hoists these out of its while_loop since only ΔI depends on
     the admitted demand.  Returns (l_solo, l_exec, delta_o, delta_u)."""
+    if xp is not jnp:
+        # host-side fast path: the raw/finish split is THE implementation
+        # (the admission warm cache replays static_raw_terms results per
+        # hid, so both cached and uncached passes must go through it)
+        l_solo, lat_pref, raw_du = static_raw_terms(
+            node_lat, node_prob, node_mask, prefix_mask, adj, n_nodes)
+        return finish_static_terms(l_solo, lat_pref, raw_du, idle_window,
+                                   memo_mask=memo_mask,
+                                   model_delay=model_delay)
     l_solo = (node_lat * prefix_mask).sum(axis=1)
     if memo_mask is None:
         l_exec = l_solo
@@ -214,15 +265,7 @@ def static_gain_terms(node_lat, node_prob, node_mask, prefix_mask, adj,
     delta_o = xp.minimum(l_solo, idle_window)
     post_mask = node_mask * (1.0 - prefix_mask)
     exp_lat = node_lat * node_prob
-    if xp is jnp:
-        delta_u = _critical_path(adj, exp_lat, post_mask, n_iters=n_nodes)
-    else:                                  # host-side numpy fast path
-        dist = (exp_lat * post_mask).copy()
-        for _ in range(n_nodes):           # masked longest-path relaxation
-            via = np.max(adj * (dist[:, :, None] + (exp_lat * post_mask)[:, None, :]),
-                         axis=1)
-            dist = np.maximum(dist, via * (post_mask > 0))
-        delta_u = dist.max(axis=1)
+    delta_u = _critical_path(adj, exp_lat, post_mask, n_iters=n_nodes)
     delta_u = xp.maximum(delta_u - model_delay, 0.0)
     return l_solo, l_exec, delta_o, delta_u
 

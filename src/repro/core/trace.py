@@ -68,7 +68,7 @@ class GanttRecorder:
 
     def close(self, now: float) -> None:
         """Flush still-open segments (jobs running at simulation end)."""
-        for jid, (t0, job) in sorted(self._open.items()):
+        for _jid, (t0, job) in sorted(self._open.items()):
             self.rows.append(self._row(job, t0, now, "open"))
         self._open.clear()
 

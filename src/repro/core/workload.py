@@ -205,7 +205,7 @@ class WorkloadConfig:
 
 def make_episodes(cfg: WorkloadConfig) -> List[Episode]:
     rng = np.random.default_rng(cfg.seed)
-    kinds, probs = zip(*cfg.mix)
+    kinds, probs = zip(*cfg.mix, strict=True)
     episodes = []
     t_arrive = 0.0
     for eid in range(cfg.n_episodes):

@@ -324,7 +324,7 @@ def prefill(
     if tail:
         h, tail_states = jax.lax.scan(inner, h, _tree_slice(params["blocks"], g * kpg, cfg.n_layers))
         main_states = tuple(
-            jnp.concatenate([m, t], axis=0) for m, t in zip(main_states, tail_states)
+            jnp.concatenate([m, t], axis=0) for m, t in zip(main_states, tail_states, strict=True)
         )
     cache["ssm_state"] = main_states
     cache["k"], cache["v"] = kc, vc
@@ -403,7 +403,7 @@ def decode_step(
             (_tree_slice(params["blocks"], g * kpg, cfg.n_layers),
              tuple(a[g * kpg :] for a in cache["ssm_state"])),
         )
-        new_st = tuple(jnp.concatenate([m, t], axis=0) for m, t in zip(new_st, st_t))
+        new_st = tuple(jnp.concatenate([m, t], axis=0) for m, t in zip(new_st, st_t, strict=True))
     new_cache["ssm_state"] = new_st
     new_cache["k"], new_cache["v"] = kc, vc
     return lm_logits(params, cfg, h[:, 0]), new_cache

@@ -42,7 +42,7 @@ def _write_slot(cache_tree, slot_cache_tree, slot: int):
         # the batch axis is the first dim where the batched and the
         # single-sequence cache disagree (1 vs max_batch)
         axis = None
-        for i, (b_, s_) in enumerate(zip(big.shape, small.shape)):
+        for i, (b_, s_) in enumerate(zip(big.shape, small.shape, strict=False)):
             if b_ != s_:
                 axis = i
                 break
@@ -86,7 +86,7 @@ class ServingEngine:
         small_s = jax.eval_shape(lambda: model_mod.init_cache(cfg, 1, max_len))
         self._batch_axes = jax.tree.map(
             lambda b, sm: next(
-                (i for i, (x, y) in enumerate(zip(b.shape, sm.shape)) if x != y), 0
+                (i for i, (x, y) in enumerate(zip(b.shape, sm.shape, strict=False)) if x != y), 0
             ),
             big_s, small_s,
         )

@@ -74,7 +74,7 @@ def compressed_grad_sync(grads, err_tree, mesh, axis: str = "pod"):
 
     flat_g, treedef = jax.tree.flatten(grads)
     flat_e = treedef.flatten_up_to(err_tree)
-    out = [leaf_sync(g, e) for g, e in zip(flat_g, flat_e)]
+    out = [leaf_sync(g, e) for g, e in zip(flat_g, flat_e, strict=True)]
     new_g = treedef.unflatten([o[0] for o in out])
     new_e = treedef.unflatten([o[1] for o in out])
     return new_g, new_e

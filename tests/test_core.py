@@ -103,7 +103,7 @@ def test_prefixspan_all_occurrences_regression():
 def test_conditional_next_normalized():
     seqs = [list("abab"), list("abc")]
     tables = conditional_next(seqs, context_len=2, min_count=1)
-    for ctx, t in tables.items():
+    for t in tables.values():
         assert abs(sum(t.values()) - 1.0) < 1e-9
 
 
@@ -277,7 +277,8 @@ def test_safety_levels_and_transforms():
     assert pol.speculative_form("edit") == ("edit", False)
     assert pol.speculative_form("deploy") is None or pol.speculative_form("deploy")[1]
     ro = READ_ONLY_POLICY
-    assert ro.speculative_form("edit") == ("pip_download", True) or True
+    # read-only policy has no transform for edit: not speculable at all
+    assert ro.speculative_form("edit") is None
     # pip_install under read-only policy degrades to its dry-run transform
     form = ro.speculative_form("pip_install")
     assert form == ("pip_download", True)
@@ -439,14 +440,14 @@ def test_tree_builder_emits_branching_subgraphs():
         for cut in range(1, min(len(tr), 5)):
             for h in b.build(tr[:cut], beam_width=8):
                 outdeg = {}
-                for i, j in h.edges:
+                for i, _ in h.edges:
                     outdeg[i] = outdeg.get(i, 0) + 1
                 model_idx = [n.idx for n in h.nodes if n.kind == NodeKind.MODEL]
                 parents = h.parent_map()
                 for n in h.nodes:
                     if n.idx not in model_idx:
                         assert len(parents.get(n.idx, ())) <= 1
-                def first_tool_below(j):
+                def first_tool_below(j, h=h, model_idx=model_idx):
                     # follow PREP/BARRIER helpers down to the branch's tool
                     while h.nodes[j].kind != NodeKind.TOOL:
                         nxt = [b2 for a2, b2 in h.edges if a2 == j

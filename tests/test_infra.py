@@ -171,7 +171,7 @@ def test_engine_batched_matches_single(small_engine):
         out = eng.step()
         toks_batched.append(out[slot])
     # allow isolated argmax ties under bf16: >=5 of 6 must agree exactly
-    agree = sum(a == b for a, b in zip(toks_batched, toks_single))
+    agree = sum(a == b for a, b in zip(toks_batched, toks_single, strict=True))
     assert agree >= 5, (toks_batched, toks_single)
     eng.slots[slot].active = False
 

@@ -364,7 +364,7 @@ def test_staged_write_serve_replays_overlay(engine):
         [("edit", {"path": "p", "change": "fix"}), ("test", {"target": "p"})]),
         engine, THOR, rcfg=RuntimeConfig(mode="serial", seed=7))
     rt_s.run()
-    for es_b, es_s in zip(rt.episodes, rt_s.episodes):
+    for es_b, es_s in zip(rt.episodes, rt_s.episodes, strict=True):
         assert es_b.state.fs == es_s.state.fs
 
 
@@ -405,7 +405,7 @@ def test_state_equivalence_with_memo_shared_workload(engine):
     rt_b = BPasteRuntime(eps, engine, THOR, rcfg=RuntimeConfig(
         mode="bpaste", max_concurrent_episodes=3))
     mb = rt_b.run()
-    for es_s, es_b in zip(rt_s.episodes, rt_b.episodes):
+    for es_s, es_b in zip(rt_s.episodes, rt_b.episodes, strict=True):
         assert es_s.state.fs == es_b.state.fs
         assert es_s.state.env == es_b.state.env
         assert [e.tool for e in es_s.history] == [e.tool for e in es_b.history]

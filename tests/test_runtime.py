@@ -52,7 +52,7 @@ def test_state_equivalence(engine, episodes):
     rt_s.run()
     rt_b = BPasteRuntime(episodes, engine, THOR, rcfg=RuntimeConfig(mode="bpaste"))
     rt_b.run()
-    for es_s, es_b in zip(rt_s.episodes, rt_b.episodes):
+    for es_s, es_b in zip(rt_s.episodes, rt_b.episodes, strict=True):
         assert es_s.state.fs == es_b.state.fs
         assert es_s.state.env == es_b.state.env
         assert [e.tool for e in es_s.history] == [e.tool for e in es_b.history]
@@ -88,7 +88,7 @@ def test_read_only_policy_transforms_level2(engine, episodes):
     # state must still be equivalent to serial
     rt_s = BPasteRuntime(episodes, engine, THOR, rcfg=RuntimeConfig(mode="serial"))
     rt_s.run()
-    for es_s, es_b in zip(rt_s.episodes, rt.episodes):
+    for es_s, es_b in zip(rt_s.episodes, rt.episodes, strict=True):
         assert es_s.state.fs == es_b.state.fs
 
 
@@ -184,7 +184,7 @@ def test_staggered_arrivals_respected(engine):
             rcfg=RuntimeConfig(mode="serial", max_concurrent_episodes=4))
     m = rt.run()
     assert len(m.episode_latencies) == len(eps)
-    for ep, es in zip(eps, rt.episodes):
+    for ep, es in zip(eps, rt.episodes, strict=True):
         assert es.t_start >= ep.arrival - 1e-9
     # timers must not pollute QoS accounting
     assert all(r == pytest.approx(1.0) for r in m.auth_slowdown_samples)
@@ -373,7 +373,7 @@ def test_event_timestamps_are_wall_start_times(engine):
         mode="serial", max_concurrent_episodes=2))
     rt.run()
     starts = {}
-    for t, kind, name, jid, spec in rt.sim.log:
+    for t, kind, name, _jid, _spec in rt.sim.log:
         if kind == "start":
             starts.setdefault(name, t)
     stretched = 0

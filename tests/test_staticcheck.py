@@ -1,0 +1,410 @@
+"""ISSUE 8: cache-coherence & trace-discipline static checker + the
+verified admission warm-start it gates.
+
+Three claims under test:
+
+* **Clean tree** — the checker's four rule families (C1 mutation
+  coverage, C2 trace discipline, C3 compat bypass, C4 dispatch shape)
+  produce ZERO findings on the repo's own source, and the CLI strict
+  gate exits 0 (this is what CI runs).
+* **Every rule fires** — each family has deliberately broken fixtures
+  that trigger exactly that rule id (no cross-talk), plus matched clean
+  fixtures showing the idioms the rules accept, and the BASELINE
+  mechanism routes known-good sites to ``meta`` instead of findings.
+* **Warm-start equivalence** — ``RuntimeConfig.warm_admit`` replays the
+  previous admission pass only behind a byte-exact signature, so the
+  full metrics summary is bit-identical to ``warm_admit=False`` on
+  pinned serving configs (TIMING_KEYS excepted), for both admission
+  kernels, with the sanitizer on, and event ≡ its own dense-equivalence
+  guarantees untouched.
+"""
+import json
+
+import pytest
+
+from repro.core.patterns import PatternEngine
+from repro.core.runtime import BPasteRuntime, RuntimeConfig
+from repro.core.workload import (
+    WorkloadConfig, episodes_to_traces, make_episodes,
+)
+from repro.staticcheck import (
+    BASELINE,
+    MUTATION_RULES,
+    check_source,
+    check_tree,
+    main as staticcheck_cli,
+)
+
+TIMING_KEYS = {"sched_us_per_admit", "sched_us_per_tick"}
+
+
+@pytest.fixture(scope="module")
+def engine():
+    train = make_episodes(WorkloadConfig(seed=1, n_episodes=20))
+    return PatternEngine(context_len=2, min_support=3).fit(
+        episodes_to_traces(train))
+
+
+def _serving_rt(engine, **rcfg_kw):
+    eps = make_episodes(WorkloadConfig(seed=42, n_episodes=8,
+                                       arrival_stagger=2.0,
+                                       shared_frac=0.5, shared_pool=2))
+    rcfg = RuntimeConfig(seed=7, max_concurrent_episodes=4,
+                         model_max_batch=4, **rcfg_kw)
+    return BPasteRuntime(eps, engine, rcfg=rcfg)
+
+
+def _rules(report):
+    return [f.rule for f in report.findings]
+
+
+# ======================================================================
+# clean tree (the acceptance gate CI runs)
+# ======================================================================
+
+def test_tree_is_clean():
+    report = check_tree()
+    assert not report.findings, report.render()
+    assert report.meta["files_checked"] > 30
+
+
+def test_cli_strict_exits_zero(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    assert staticcheck_cli(["--strict", "--json", str(out)]) == 0
+    payload = json.loads(out.read_text())
+    assert payload["findings"] == []
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_reports_broken_tree(tmp_path):
+    pkg = tmp_path / "core"
+    pkg.mkdir()
+    (pkg / "runtime.py").write_text(
+        "class R:\n    def bad(self, es):\n        es.history = []\n")
+    assert staticcheck_cli(["--root", str(tmp_path)]) == 1
+    assert staticcheck_cli(["--root", str(tmp_path), "--strict"]) == 2
+
+
+# ======================================================================
+# C1: mutation coverage
+# ======================================================================
+
+def test_c1_unmarked_write_fires():
+    src = (
+        "class R:\n"
+        "    def bad(self, es):\n"
+        "        es.pending_action = None\n"
+    )
+    report = check_source(src, "core/runtime.py")
+    assert _rules(report) == ["C1-mutation"]
+    assert "pending_action" in report.findings[0].detail
+
+
+def test_c1_marked_write_is_clean():
+    src = (
+        "class R:\n"
+        "    def good(self, es):\n"
+        "        es.pending_action = None\n"
+        "        self._mark_dirty(es)\n"
+    )
+    assert not check_source(src, "core/runtime.py").findings
+
+
+def test_c1_mutator_method_counts_as_write():
+    src = (
+        "class R:\n"
+        "    def bad(self, es):\n"
+        "        es.history.append(1)\n"
+    )
+    report = check_source(src, "core/runtime.py")
+    assert _rules(report) == ["C1-mutation"]
+
+
+def test_c1_one_branch_unmarked_fires():
+    # invalidation on only one path: the else-branch write escapes
+    src = (
+        "class R:\n"
+        "    def bad(self, es, flag):\n"
+        "        es.phase = 1\n"
+        "        if flag:\n"
+        "            self._mark_dirty(es)\n"
+    )
+    report = check_source(src, "core/runtime.py")
+    assert _rules(report) == ["C1-mutation"]
+
+
+def test_c1_early_return_path_checked():
+    src = (
+        "class R:\n"
+        "    def bad(self, es, flag):\n"
+        "        es.phase = 1\n"
+        "        if flag:\n"
+        "            return\n"          # escapes without the mark
+        "        self._mark_dirty(es)\n"
+    )
+    report = check_source(src, "core/runtime.py")
+    assert _rules(report) == ["C1-mutation"]
+
+
+def test_c1_init_exempt():
+    src = (
+        "class R:\n"
+        "    def __init__(self):\n"
+        "        self.history = []\n"
+    )
+    assert not check_source(src, "core/runtime.py").findings
+
+
+def test_c1_pair_group_partial_update_fires():
+    # noderun-pairs: touching one of a paired cache/epoch duo without the
+    # other is exactly the stale-read bug the rule exists for
+    src = (
+        "class NR:\n"
+        "    def bad(self, nr):\n"
+        "        nr.args_cache = {}\n"
+    )
+    report = check_source(src, "core/runtime.py")
+    assert "C1-mutation" in _rules(report)
+    assert any("args_epoch" in f.detail for f in report.findings)
+
+
+def test_c1_pair_group_full_update_is_clean():
+    src = (
+        "class NR:\n"
+        "    def good(self, nr):\n"
+        "        nr.args_cache = {}\n"
+        "        nr.args_epoch = -1\n"
+    )
+    assert not check_source(src, "core/runtime.py").findings
+
+
+def test_c1_ban_rule_exempt_site_only():
+    src = (
+        "class Simulator:\n"
+        "    def set_speculative(self, job):\n"
+        "        job.speculative = True\n"
+        "    def other(self, job):\n"
+        "        job.speculative = True\n"
+    )
+    report = check_source(src, "core/simulator.py")
+    assert _rules(report) == ["C1-mutation"]
+    assert "Simulator.other" in report.findings[0].site
+
+
+def test_c1_baseline_routes_to_meta_not_findings():
+    # a known-justified site lands in meta["baselined"], not findings
+    src = (
+        "class BPasteRuntime:\n"
+        "    def _launch_frontier(self, nr):\n"
+        "        nr.status = 'reused'\n"
+    )
+    report = check_source(src, "core/runtime.py")
+    assert not report.findings
+    hits = report.meta["baselined"]
+    assert len(hits) == 1 and hits[0]["rule"] == "C1-mutation"
+    assert ("C1-mutation",
+            "core/runtime.py:BPasteRuntime._launch_frontier") in BASELINE
+
+
+def test_c1_registry_covers_runtime_and_stores():
+    mods = {m for r in MUTATION_RULES for m in r.modules}
+    assert {"core/runtime.py", "core/simulator.py",
+            "core/memo.py", "core/executor.py"} <= mods
+
+
+# ======================================================================
+# C2: trace discipline
+# ======================================================================
+
+def test_c2_branch_on_traced_value_fires():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x > 0:\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    report = check_source(src, "core/scoring.py")
+    assert _rules(report) == ["C2-trace"]
+
+
+def test_c2_float_cast_in_lax_body_fires():
+    src = (
+        "import jax\n"
+        "def step(carry, x):\n"
+        "    return carry + float(x), None\n"
+        "def outer(xs):\n"
+        "    return jax.lax.scan(step, 0.0, xs)\n"
+    )
+    report = check_source(src, "core/scoring.py")
+    assert _rules(report) == ["C2-trace"]
+
+
+def test_c2_static_argnames_not_tainted():
+    src = (
+        "import functools, jax\n"
+        "@functools.partial(jax.jit, static_argnames=('n',))\n"
+        "def f(x, n):\n"
+        "    if n > 2:\n"
+        "        return x * n\n"
+        "    return x\n"
+    )
+    assert not check_source(src, "core/scoring.py").findings
+
+
+def test_c2_shape_access_launders_taint():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x.shape[0] > 2:\n"
+        "        return x[:2]\n"
+        "    return x\n"
+    )
+    assert not check_source(src, "core/scoring.py").findings
+
+
+def test_c2_pallas_kwonly_params_are_static():
+    # keyword-only kernel params are functools.partial-bound config, not
+    # traced refs — the decode-attention window/partials idiom
+    src = (
+        "import functools\n"
+        "from jax.experimental import pallas as pl\n"
+        "def _kernel(x_ref, o_ref, *, window):\n"
+        "    if window is not None:\n"
+        "        o_ref[...] = x_ref[...]\n"
+        "def run(x):\n"
+        "    return pl.pallas_call(functools.partial(_kernel, window=3))(x)\n"
+    )
+    assert not check_source(src, "core/kernels/k.py").findings
+
+
+def test_c2_host_tree_map_not_traced():
+    # jax.tree.map is a host-side pytree walk, not a lax loop body
+    src = (
+        "import jax\n"
+        "def f(specs):\n"
+        "    def zero(s):\n"
+        "        if s is None:\n"
+        "            return 0\n"
+        "        return s\n"
+        "    return jax.tree.map(zero, specs)\n"
+    )
+    assert not check_source(src, "launch/shardings.py").findings
+
+
+# ======================================================================
+# C3: compat bypass
+# ======================================================================
+
+def test_c3_direct_shard_map_import_fires():
+    src = "from jax.experimental.shard_map import shard_map\n"
+    report = check_source(src, "core/runtime.py")
+    assert _rules(report) == ["C3-compat"]
+
+
+def test_c3_direct_compiler_params_fires():
+    src = (
+        "from jax.experimental import pallas as pl\n"
+        "import jax.experimental.pallas.tpu as pltpu\n"
+        "def f(k, x):\n"
+        "    return pl.pallas_call(\n"
+        "        k, compiler_params=pltpu.TPUCompilerParams())(x)\n"
+    )
+    report = check_source(src, "kernels/bad.py")
+    assert "C3-compat" in _rules(report)
+
+
+def test_c3_compat_module_itself_exempt():
+    src = "from jax.experimental.shard_map import shard_map\n"
+    assert not check_source(src, "compat.py").findings
+
+
+# ======================================================================
+# C4: dispatch shape
+# ======================================================================
+
+def test_c4_unbucketed_pack_fires():
+    src = (
+        "def repack(hyps, n_max):\n"
+        "    return pack_beam(hyps, len(hyps), n_max)\n"
+    )
+    report = check_source(src, "core/admission.py")
+    assert _rules(report) == ["C4-dispatch"]
+
+
+def test_c4_bucketed_pack_is_clean():
+    src = (
+        "def repack(hyps, k_max, n_max):\n"
+        "    return pack_beam(hyps, bucket_k(len(hyps), k_max), n_max)\n"
+    )
+    assert not check_source(src, "core/admission.py").findings
+
+
+def test_c4_kernel_call_outside_wrapper_fires():
+    src = (
+        "def sneaky(packed):\n"
+        "    return admit_beam(packed.node_lat, n_nodes=8)\n"
+    )
+    report = check_source(src, "core/runtime.py")
+    assert _rules(report) == ["C4-dispatch"]
+
+
+def test_c4_kernel_call_in_wrapper_is_clean():
+    src = (
+        "def fused_admit(packed):\n"
+        "    return admit_beam(packed.node_lat, n_nodes=8)\n"
+    )
+    assert not check_source(src, "core/admission.py").findings
+
+
+def test_syntax_error_reported_not_raised():
+    report = check_source("def broken(:\n", "core/x.py")
+    assert _rules(report) == ["C0-syntax"]
+
+
+# ======================================================================
+# admission warm-start equivalence
+# ======================================================================
+
+@pytest.mark.parametrize("admission", ["reference", "fused"])
+def test_warm_admit_summary_bit_identical(engine, admission):
+    """The signed replay + per-hid static-terms cache change wall time
+    only: every non-timing summary key matches warm_admit=False exactly."""
+    rt_warm = _serving_rt(engine, warm_admit=True, admission=admission)
+    rt_cold = _serving_rt(engine, warm_admit=False, admission=admission)
+    rt_warm.run()
+    rt_cold.run()
+    a, b = rt_warm.metrics.summary(), rt_cold.metrics.summary()
+    keys = (set(a) | set(b)) - TIMING_KEYS
+    assert {k: a.get(k) for k in keys} == {k: b.get(k) for k in keys}
+
+
+def test_warm_admit_counters_track_passes(engine):
+    rt = _serving_rt(engine, warm_admit=True)
+    rt.run()
+    m = rt.metrics
+    assert m.sched_warm_hits + m.sched_warm_misses == m.sched_admit_calls
+    assert m.sched_warm_misses > 0          # first pass is always a miss
+    # the counters are diagnostics, not behavior: summaries must stay
+    # comparable across warm on/off, so they are deliberately excluded
+    assert "sched_warm_hits" not in m.summary()
+
+
+def test_warm_admit_off_runs_no_warm_machinery(engine):
+    rt = _serving_rt(engine, warm_admit=False)
+    rt.run()
+    assert rt.metrics.sched_warm_hits == 0
+    assert rt.metrics.sched_warm_misses == 0
+    assert rt._warm_sig is None and not rt._static_rows
+
+
+def test_warm_admit_sanitizer_clean(engine):
+    """S1-S5 on a warm run: the replayed admitted sets keep every cache,
+    dirty set, and counter group coherent."""
+    rt = _serving_rt(engine, warm_admit=True, sanitize=True,
+                     sanitize_every=3, analysis="off")
+    rt.run()
+    assert rt.sanitizer is not None
+    assert not rt.sanitizer.report.findings, rt.sanitizer.report.render()
