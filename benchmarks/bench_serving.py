@@ -34,6 +34,15 @@ batching never weakens the authoritative-protection invariant.
 ``max_batch=1`` rows are the pinned baseline: the service's solo fast path
 is a synchronous pass-through, regression-tested bit-identical in
 tests/test_model_service.py.
+
+The ``bpaste+memo+batch+specstep`` row is PR 9's headline: batch slots
+that would otherwise dispatch under-full carry speculative reasoning
+steps — drafts of upcoming reasoning boundaries predicted from the
+hypothesis trees' spines (runtime.py `_submit_spec_step`,
+model_service.py `submit_speculative`).  Passengers ride free (batch
+duration is set by authoritative works only) and validate on arrival, so
+the row must show ``mean_auth_slowdown=1.000`` and zero QoS violations
+while beating the plain ``+batch`` makespan.
 """
 from __future__ import annotations
 
@@ -54,20 +63,24 @@ THOR_BOX = Machine()                      # PR 3's edge box (accel=1)
 # RuntimeConfig defaults (1.5 s window, 0.3 marginal — see DESIGN.md)
 BATCH = 8
 
-# mode label -> (runtime mode, memo enabled, model_max_batch).  NOTE: the
-# runtime DEFAULT is memo=True (the store is part of the shipped system,
-# and every other bench measures bpaste with it on); this grid's plain
-# "paste"/"bpaste" rows disable it explicitly so the "+memo" column
+# mode label -> (runtime mode, memo enabled, model_max_batch, spec steps).
+# NOTE: the runtime DEFAULT is memo=True (the store is part of the shipped
+# system, and every other bench measures bpaste with it on); this grid's
+# plain "paste"/"bpaste" rows disable it explicitly so the "+memo" column
 # isolates the store's contribution — same scheduler, store off vs on.
 # The "+batch" rows raise model_max_batch the same way: same scheduler and
-# store, batched vs serial model-step queue.
+# store, batched vs serial model-step queue.  The "+specstep" row then
+# fills the batch slots that would otherwise dispatch under-full with
+# speculative reasoning steps (RuntimeConfig.spec_model_steps) — same
+# scheduler, store, and batch cap, idle slots riding free vs wasted.
 MODES = {
-    "serial": ("serial", False, 1),
-    "paste": ("paste", False, 1),
-    "bpaste": ("bpaste", False, 1),
-    "bpaste+memo": ("bpaste", True, 1),
-    "serial+batch": ("serial", False, BATCH),
-    "bpaste+memo+batch": ("bpaste", True, BATCH),
+    "serial": ("serial", False, 1, False),
+    "paste": ("paste", False, 1, False),
+    "bpaste": ("bpaste", False, 1, False),
+    "bpaste+memo": ("bpaste", True, 1, False),
+    "serial+batch": ("serial", False, BATCH, False),
+    "bpaste+memo+batch": ("bpaste", True, BATCH, False),
+    "bpaste+memo+batch+specstep": ("bpaste", True, BATCH, True),
 }
 
 
@@ -78,10 +91,10 @@ def _fit_engine(n_train: int) -> PatternEngine:
 
 
 def _cell(test, engine, label: str, conc: int, machine) -> Dict:
-    mode, memo, max_batch = MODES[label]
+    mode, memo, max_batch, spec = MODES[label]
     m = run_mode(test, engine, mode, machine, seed=7,
                  max_concurrent_episodes=conc, memo=memo,
-                 model_max_batch=max_batch)
+                 model_max_batch=max_batch, spec_model_steps=spec)
     s = m.summary()
     return s
 
@@ -97,6 +110,11 @@ def _row(name: str, s: Dict) -> Dict:
             or s.get("model_queue_delay_seconds", 0.0) > 0):
         batch = (f" model_batch_occ={s['model_batch_occupancy']:.2f} "
                  f"model_qdelay={s['mean_model_queue_delay']:.2f}")
+    if s.get("spec_steps_submitted", 0) > 0:
+        batch += (f" spec_acc={s['spec_steps_accepted']:.0f}"
+                  f"/{s['spec_steps_submitted']:.0f} "
+                  f"spec_saved={s['spec_step_saved_seconds']:.1f} "
+                  f"spec_fill={s['spec_slot_fill']:.2f}")
     return {
         "name": name,
         "us_per_call": 0.0,
@@ -136,9 +154,11 @@ def run(smoke: bool = False) -> List[Dict]:
     # converged for every tool-level mechanism (PR 3/4) — re-run with the
     # model-step queue batched.  In the smoke tier too: these are the rows
     # CI's bench-smoke artifact tracks for the separation regression.
-    thor_labels = (["serial", "bpaste+memo", "bpaste+memo+batch"] if smoke
+    thor_labels = (["serial", "bpaste+memo", "bpaste+memo+batch",
+                    "bpaste+memo+batch+specstep"] if smoke
                    else ["serial", "serial+batch", "bpaste+memo",
-                         "bpaste+memo+batch"])
+                         "bpaste+memo+batch",
+                         "bpaste+memo+batch+specstep"])
     engine = _fit_engine(n_train)
     test = make_episodes(WorkloadConfig(seed=42, n_episodes=n_test,
                                         arrival_stagger=4.0,
@@ -175,4 +195,11 @@ def run(smoke: bool = False) -> List[Dict]:
         rows.append(_compare_row("serving/thor_c8_batch_vs_serial_batch",
                                  thor["serial+batch"],
                                  thor["bpaste+memo+batch"]))
+    # the latency speculative reasoning steps reclaim from under-full
+    # batch dispatches (PR 9 headline: idle slots ride free)
+    if ("bpaste+memo+batch+specstep" in thor
+            and "bpaste+memo+batch" in thor):
+        rows.append(_compare_row("serving/thor_c8_specstep_vs_batch",
+                                 thor["bpaste+memo+batch"],
+                                 thor["bpaste+memo+batch+specstep"]))
     return rows

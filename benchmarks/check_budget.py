@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import sys
 
 REGRESSION_FACTOR = 2.0
@@ -23,8 +24,56 @@ REGRESSION_FACTOR = 2.0
 # bench's warmoff/warm us-per-admit ratio at c>=64 dropping to ~1x means
 # the signature replay + static-terms cache stopped hitting
 WARM_CUT_MIN = 1.1
+# speculative reasoning steps (ISSUE 9): passengers are free by
+# construction, but a drifting pattern table shows up as a squash-rate
+# spike (slots burned on dead predictions) or as the specstep row losing
+# its lead over the plain batched row on the edge box
+SPEC_SQUASH_MAX = 0.8
 BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
                         "scheduler_sweep.json")
+
+
+def _derived_num(row, key: str):
+    m = re.search(rf"\b{re.escape(key)}=([0-9.]+)", row.get("derived", ""))
+    return float(m.group(1)) if m else None
+
+
+def check_spec_steps(rows) -> list:
+    """Non-blocking watch over the serving bench's specstep rows: warn
+    when the squash rate spikes or the edge-box specstep cell stops
+    beating the plain batched cell it free-rides on."""
+    warnings = []
+    by_name = {r.get("name", ""): r for r in rows}
+    for r in rows:
+        name = r.get("name", "")
+        if "specstep" not in name or not name.startswith("serving/"):
+            continue
+        m = re.search(r"\bspec_acc=(\d+)/(\d+)", r.get("derived", ""))
+        if m:
+            acc, sub = int(m.group(1)), int(m.group(2))
+            squash_rate = 1.0 - acc / sub if sub else 0.0
+            if sub and squash_rate > SPEC_SQUASH_MAX:
+                warnings.append(
+                    f"{name}: spec-step squash rate {squash_rate:.2f} "
+                    f"({sub - acc}/{sub} non-accepted) exceeds "
+                    f"{SPEC_SQUASH_MAX} — the mined table's predictions "
+                    f"are mostly dead on arrival")
+    spec = by_name.get("serving/thor_c8_bpaste+memo+batch+specstep")
+    plain = by_name.get("serving/thor_c8_bpaste+memo+batch")
+    if spec and plain:
+        ms, mp = _derived_num(spec, "makespan"), _derived_num(plain,
+                                                              "makespan")
+        if ms is not None and mp is not None and ms >= mp:
+            warnings.append(
+                f"thor_c8 specstep makespan {ms:.1f} no longer beats the "
+                f"plain batched cell ({mp:.1f}) — idle-slot drafts have "
+                f"stopped paying")
+        slow = _derived_num(spec, "mean_auth_slowdown")
+        if slow is not None and slow > 1.0:
+            warnings.append(
+                f"thor_c8 specstep mean_auth_slowdown={slow:.3f} — "
+                f"passengers must ride free (expected exactly 1.000)")
+    return warnings
 
 
 def check(rows, baseline) -> list:
@@ -77,7 +126,7 @@ def main() -> int:
     except (OSError, ValueError) as e:
         print(f"::warning::budget check skipped: {e}")
         return 0
-    warnings = check(rows, baseline)
+    warnings = check(rows, baseline) + check_spec_steps(rows)
     for w in warnings:
         print(f"::warning::{w}")
     if not warnings:

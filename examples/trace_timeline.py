@@ -12,8 +12,12 @@ demonstrated here at readable scale).
 
 Reading the chart: ``=`` segments are authoritative work (model steps,
 batched model invocations carry a ``b<seq>`` batch tag, tools), ``~``
-segments are speculative branch nodes running inside sandboxes, ``x``
-marks a preemption (Phase-2 protection or a squash killed the segment).
+segments are speculative branch nodes running inside sandboxes, ``%``
+segments are batched dispatches whose idle slots carry speculative
+reasoning-step passengers (label suffix ``+Ns`` counts them — the
+free riders `spec_model_steps` books per batch via meta["spec_eids"]),
+``x`` marks a preemption (Phase-2 protection or a squash killed the
+segment).
 
 CI runs this in the fast tier like speculative_serving.py.
 """
@@ -48,7 +52,7 @@ def main() -> None:
     rec = GanttRecorder()
     rt = BPasteRuntime(tenants, engine, Machine(), rcfg=RuntimeConfig(
         mode="bpaste", seed=7, max_concurrent_episodes=args.episodes,
-        model_max_batch=8, trace=rec))
+        model_max_batch=8, spec_model_steps=True, trace=rec))
     m = rt.run()
     rec.close(rt.sim.now)
 
@@ -57,10 +61,15 @@ def main() -> None:
     s = m.summary()
     spec_rows = sum(1 for r in rec.rows if r["speculative"])
     batch_rows = sum(1 for r in rec.rows if r["batch"] is not None)
+    rider_rows = sum(1 for r in rec.rows if r.get("spec_tenants"))
     print(f"{len(rec.rows)} timeline rows ({spec_rows} speculative, "
-          f"{batch_rows} batched model invocations) -> {out}")
+          f"{batch_rows} batched model invocations, "
+          f"{rider_rows} carrying spec-step passengers) -> {out}")
     print(f"makespan={s['makespan']:.1f}s  reuses={s['reuses']:.0f}  "
           f"promotions={s['promotions']:.0f}  "
+          f"spec_steps={s['spec_steps_accepted']:.0f}/"
+          f"{s['spec_steps_submitted']:.0f} accepted "
+          f"(saved {s['spec_step_saved_seconds']:.1f}s)  "
           f"sched_us_per_tick={s['sched_us_per_tick']:.0f}")
     print()
     print(render_ascii(rec.rows))
@@ -69,9 +78,11 @@ def main() -> None:
     with open(out) as f:
         rows = json.load(f)
     assert rows and all(
-        {"job", "tenant", "t_start", "t_end", "speculative", "batch"}
-        <= set(r) for r in rows)
+        {"job", "tenant", "t_start", "t_end", "speculative", "batch",
+         "spec_tenants"} <= set(r) for r in rows)
     assert any(r["speculative"] for r in rows), "no speculation recorded"
+    assert any(r["spec_tenants"] for r in rows), \
+        "no spec-step passengers recorded"
 
 
 if __name__ == "__main__":

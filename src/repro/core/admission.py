@@ -83,6 +83,7 @@ def greedy_admit(
     memo_masks: Optional[np.ndarray] = None,
     memo_rho: Optional[np.ndarray] = None,
     model_delay: float = 0.0,
+    spec_costs: Optional[np.ndarray] = None,
 ) -> AdmissionResult:
     """Reference greedy: scoring dispatches (one per k_max chunk) + numpy
     re-pack PER admission iteration.  Semantics oracle for ``fused_admit``;
@@ -100,7 +101,11 @@ def greedy_admit(
     capacity-fit check use the memo-excluded prefix ρ.
 
     ``model_delay`` is the model-step service's expected queue+batch-window
-    delay, discounting every candidate's ΔU (scoring.static_gain_terms)."""
+    delay, discounting every candidate's ΔU (scoring.static_gain_terms).
+
+    ``spec_costs`` (len(hyps),) is the slot-marginal model-step cost of each
+    candidate's speculative MODEL step (see scoring.score_beam); None means
+    zeros (bit-identical no-op)."""
     limit = np.minimum(slack, budget)
     admitted: List[BranchHypothesis] = []
     admitted_demand = np.zeros(RESOURCE_DIMS)
@@ -120,6 +125,7 @@ def greedy_admit(
             memo_masks=None if memo_masks is None else memo_masks[rows],
             memo_rho=None if memo_rho is None else memo_rho[rows],
             model_delay=model_delay,
+            spec_costs=None if spec_costs is None else spec_costs[rows],
         )
         if w_by_hid is not None:
             eu = eu * np.array([w_by_hid[h.hid] for h in remaining])
@@ -166,7 +172,7 @@ def bucket_k(n: int, k_max: int) -> int:
 
 
 def admission_signature(hids, slack, budget, auth_rho, weights, memo_masks,
-                        memo_rho, model_delay) -> tuple:
+                        memo_rho, model_delay, spec_costs=None) -> tuple:
     """Byte-exact signature of every input one shared-admission pass is a
     function of.  ``greedy_admit``/``fused_admit`` are deterministic in
     (candidate hypotheses, slack, budget, conditioning demand, fairness
@@ -184,6 +190,7 @@ def admission_signature(hids, slack, budget, auth_rho, weights, memo_masks,
         None if memo_masks is None else memo_masks.tobytes(),
         None if memo_rho is None else memo_rho.tobytes(),
         float(model_delay),
+        None if spec_costs is None else spec_costs.tobytes(),
     )
 
 
@@ -191,7 +198,7 @@ def admission_signature(hids, slack, budget, auth_rho, weights, memo_masks,
 def admit_beam(
     node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid,
     w, memo_mask, auth_rho, cap, limit, lam, mu, idle_window, model_delay,
-    n_nodes: int,
+    spec_cost, n_nodes: int,
 ):
     """Entire greedy admission pass as ONE jitted kernel.
 
@@ -218,12 +225,19 @@ def admit_beam(
     model-step service's expected queue+batch-window delay; it is
     loop-invariant, so it folds into the hoisted static terms.
 
+    ``spec_cost`` (K,) is the slot-marginal model-step cost of each
+    candidate's speculative MODEL step (scoring.score_beam) — also
+    loop-invariant, folded into the hoisted static terms with the SAME
+    operation order as every other admission path so zeros stay an
+    IEEE-exact no-op and decisions stay equivalence-testable.
+
     Returns (admitted_mask (K,), eu_at_admit (K,), admitted_demand (R,)).
     """
     l_solo, l_exec, delta_o, delta_u = static_gain_terms(
         node_lat, node_prob, node_mask, prefix_mask, adj, idle_window,
         n_nodes, memo_mask=memo_mask, model_delay=model_delay,
     )
+    delta_o = delta_o - mu * spec_cost
     fit_lim = _fit_limit(limit)
     K = q.shape[0]
 
@@ -261,7 +275,7 @@ def admit_beam(
 
 def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
                  idle_window, w=None, memo_mask=None,
-                 rho=None, model_delay=0.0,
+                 rho=None, model_delay=0.0, spec_cost=None,
                  static_terms=None) -> Tuple[np.ndarray, np.ndarray]:
     """The ``admit_beam`` algorithm on the same PackedBeam tables in pure
     numpy — the host-side fast path for tiny beams, where a single XLA
@@ -301,6 +315,8 @@ def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
     q, k_valid, rho, w = q[act], k_valid[act], rho[act], w[act]
     if memo_mask is not None:
         memo_mask = memo_mask[act]
+    if spec_cost is not None:
+        spec_cost = spec_cost[act]
     if static_terms is None:
         l_solo, l_exec, delta_o, delta_u = static_gain_terms(
             lat, prob, mask, pmask, adj, idle_window, N,
@@ -314,9 +330,14 @@ def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
             s_solo[act], s_pref[act], s_raw[act], idle_window,
             memo_mask=memo_mask, model_delay=model_delay,
         )
+    if spec_cost is not None:
+        # slot-marginal model-step cost — same point and operation order as
+        # score_beam/admit_beam so zeros are an IEEE-exact no-op
+        delta_o = delta_o - mu * spec_cost
     # Second prune: ΔI ≥ 0 only ever subtracts, so q·(ΔO+λΔU)·k_valid·w
     # is a static per-row EU ceiling — rows at/below 0 can never clear the
-    # eu > 0 eligibility bar.
+    # eu > 0 eligibility bar.  (spec_cost is already folded into ΔO above,
+    # so the ceiling remains valid.)
     static_gain = delta_o + lam * delta_u
     pos = np.flatnonzero(q * static_gain * k_valid * w > 0.0)
     if not len(pos):
@@ -420,6 +441,7 @@ def fused_admit(
     memo_masks: Optional[np.ndarray] = None,
     memo_rho: Optional[np.ndarray] = None,
     model_delay: float = 0.0,
+    spec_costs: Optional[np.ndarray] = None,
     static_cache: Optional[dict] = None,
 ) -> AdmissionResult:
     """Greedy admission via the fused ``admit_beam`` kernel: one XLA dispatch
@@ -437,7 +459,10 @@ def fused_admit(
     reason (store contents change every tick; the pack does not).
     ``model_delay`` (the model-step service's expected unlock delay) also
     rides alongside — a traced scalar, so the jit cache is untouched as the
-    batch window moves.  ``static_cache`` (caller-owned {hid: raw terms},
+    batch window moves.  ``spec_costs`` (len(hyps),) is the slot-marginal
+    model-step cost term (scoring.score_beam), riding alongside for the
+    same reason; None means zeros, a bit-identical no-op.
+    ``static_cache`` (caller-owned {hid: raw terms},
     host path only) replays hypothesis-intrinsic static gain terms across
     passes — see ``_cached_static_terms``."""
     if not len(hyps):
@@ -451,9 +476,12 @@ def fused_admit(
     if weights is not None:
         w_pad[: len(hyps)] = np.asarray(weights, float)
     mm_pad = np.zeros((K, packed.node_lat.shape[1]))
+    sc_pad = np.zeros(K)
     rho = packed.rho
     if memo_masks is not None:
         mm_pad[: len(hyps), :] = np.asarray(memo_masks, float)
+    if spec_costs is not None:
+        sc_pad[: len(hyps)] = np.asarray(spec_costs, float)
     if memo_rho is not None:
         rho = rho.copy()
         rho[: len(hyps), :] = np.asarray(memo_rho, float)
@@ -466,6 +494,7 @@ def fused_admit(
             packed, np.asarray(authoritative_rho, float), cap,
             np.asarray(limit, float), scorer.lam, scorer.mu, idle_window,
             w=w_pad, memo_mask=mm_pad, rho=rho, model_delay=model_delay,
+            spec_cost=sc_pad,
             static_terms=static_terms,
         )
     else:
@@ -475,7 +504,8 @@ def fused_admit(
             jnp.asarray(w_pad), jnp.asarray(mm_pad),
             jnp.asarray(authoritative_rho),
             jnp.asarray(cap), jnp.asarray(limit), scorer.lam, scorer.mu,
-            idle_window, model_delay, n_nodes=scorer.n_max,
+            idle_window, model_delay, jnp.asarray(sc_pad),
+            n_nodes=scorer.n_max,
         )
         admitted_mask = np.asarray(admitted_mask)
         eu_adm = np.asarray(eu_adm)

@@ -76,6 +76,14 @@ class BranchHypothesis:
     q: float                              # follow probability
     context_key: Tuple                    # signature context it was built from
     created_t: float = 0.0
+    model_idx: int = -1                   # idx of the terminal MODEL join
+    spine_leaf: int = -1                  # idx of the max-path_q leaf: the
+                                          # continuation the speculative
+                                          # model step assumes (two-segment
+                                          # assembly emits this leaf's edge
+                                          # into the MODEL join FIRST, so
+                                          # path_to(model_idx) walks the
+                                          # spine)
 
     # ---- derived ----
     @property
@@ -207,6 +215,9 @@ class HypothesisBuilder:
     min_q: float = 0.05
     with_prep: bool = True        # PREP nodes are a B-PASTE §4.1 feature
     assembly: str = "tree"        # "tree" | "chain" (pre-tree linear baseline)
+    spec_steps: bool = False      # two-segment trees: continue past the MODEL
+                                  # join with the mined table's top predicted
+                                  # continuation (speculative reasoning steps)
     _next_hid: itertools.count = field(default_factory=itertools.count)
 
     def _context_key(self, history: Sequence[Event]) -> Tuple:
@@ -317,13 +328,21 @@ class HypothesisBuilder:
         """Emit the bounded subgraph G: PREP before cold tools, BARRIER
         before Level-2 nodes (both on the branch's own path), branching edges
         at interior nodes, and a single MODEL join behind every leaf (the
-        reasoning boundary whichever branch the agent follows)."""
+        reasoning boundary whichever branch the agent follows).
+
+        With ``spec_steps`` the tree is **two-segment**: the spine (max
+        path-probability root-to-leaf path) continues PAST the MODEL join
+        with the mined table's top predicted continuation — the reasoning
+        outcome a speculative model step would assume.  The spine leaf's
+        edge into the MODEL join is emitted first so ``path_to(model_idx)``
+        walks the spine (``path_to`` follows first parents)."""
         nodes: List[Node] = []
         edges: List[Tuple[int, int]] = []
         leaves: List[int] = []
+        leaf_info: List[Tuple[int, float, List]] = []
         idx = 0
 
-        def emit(tn: _TreeNode, parent: Optional[int]):
+        def emit(tn: _TreeNode, parent: Optional[int], path_sigs: List):
             nonlocal idx
             spec = self.tools[tn.pt.tool]
             prev = parent
@@ -352,21 +371,70 @@ class HypothesisBuilder:
             idx += 1
             if not tn.children:
                 leaves.append(tool_idx)
+                leaf_info.append((tool_idx, tn.path_q, path_sigs))
             for child in tn.children:
-                emit(child, tool_idx)
+                emit(child, tool_idx, path_sigs + [child.pt.next_sig])
 
-        emit(tree, None)
+        sigs = [signature(e) for e in history]
+        emit(tree, None, sigs + [tree.pt.next_sig])
+        # spine: max-path_q root-to-leaf path (ties break to emission order)
+        spine_idx, _, spine_sigs = max(leaf_info, key=lambda t: t[1])
         # model node: the reasoning boundary that this subgraph would unlock
         model_spec = self.tools["model_step"]
-        nodes.append(Node(idx, NodeKind.MODEL, "model_step", model_spec.level,
+        midx = idx
+        nodes.append(Node(midx, NodeKind.MODEL, "model_step", model_spec.level,
                           model_spec.rho, model_spec.base_latency))
-        for leaf in leaves:
-            edges.append((leaf, idx))
+        if self.spec_steps:
+            # spine leaf first: path_to(model_idx) must walk the spine
+            for leaf in [spine_idx] + [lf for lf in leaves if lf != spine_idx]:
+                edges.append((leaf, midx))
+            self._emit_segment2(nodes, edges, midx, spine_sigs)
+        else:
+            for leaf in leaves:
+                edges.append((leaf, midx))
         hist_key = self._context_key(history)
         return BranchHypothesis(
             hid=next(self._next_hid), nodes=nodes, edges=edges, q=q,
             context_key=hist_key, created_t=now,
+            model_idx=midx, spine_leaf=spine_idx,
         )
+
+    def _emit_segment2(self, nodes: List[Node], edges: List[Tuple[int, int]],
+                       model_idx: int, spine_sigs: List) -> None:
+        """Segment 2 of a two-segment tree: the mined table's top
+        continuation PAST the reasoning boundary.  Model steps never appear
+        in the mined signature stream, so the same ``predict_sigs`` call
+        that would have extended the spine leaf predicts what the agent's
+        next reasoning step will decide.  The subtree stays closed (MODEL
+        is not in ``safe_prefix``) until the runtime validates a speculative
+        model step against the authoritative history; it then launches like
+        any frontier node.  PREP/BARRIER helpers are inserted exactly as in
+        segment 1 (R4: staged writes keep their commit barrier)."""
+        preds = self.engine.predict_sigs(spine_sigs, top=1)
+        if not preds:
+            return
+        pt, p = preds[0]
+        if p < self.min_q or pt.next_sig is None:
+            return
+        spec = self.tools[pt.tool]
+        idx = len(nodes)
+        prev = model_idx
+        if self.with_prep and pt.tool in COLD_TOOLS:
+            prep_spec = self.tools["env_warmup"]
+            nodes.append(Node(idx, NodeKind.PREP, "env_warmup",
+                              prep_spec.level, prep_spec.rho,
+                              prep_spec.base_latency))
+            edges.append((prev, idx))
+            prev = idx
+            idx += 1
+        if spec.level >= SafetyLevel.STAGED_WRITE:
+            nodes.append(Node(idx, NodeKind.BARRIER, "barrier",
+                              SafetyLevel.READ_ONLY, ResourceVector(), 0.0))
+            edges.append((prev, idx))
+            prev = idx
+            idx += 1
+        nodes.append(self._tool_node(idx, pt, p))
+        edges.append((prev, idx))
 
     def _expand_chain(
         self, sigs: List, root: PatternTuple, root_p: float
@@ -444,4 +512,5 @@ class HypothesisBuilder:
         return BranchHypothesis(
             hid=next(self._next_hid), nodes=nodes, edges=edges, q=q,
             context_key=hist_key, created_t=now,
+            model_idx=idx, spine_leaf=prev if prev is not None else -1,
         )

@@ -74,6 +74,28 @@ class ModelStepRequest:
     batchable: bool = True
 
 
+@dataclass
+class SpecStepTicket:
+    """One speculative reasoning step riding an idle slot of a forming batch.
+
+    Passengers are strictly lower priority than authoritative fill: they
+    never open an admission window, never trigger dispatch, never extend
+    linger, and the lowest-EU passenger is EVICTED (``on_evict``) — never
+    the batch delayed — when an authoritative request needs the slot.  A
+    dispatched passenger rides FREE: batch duration is computed from the
+    authoritative members' works only, so authoritative timing is
+    bit-identical to a run without passengers (zero marginal latency up to
+    ``max_batch``).  ``on_done`` fires after the authoritative members'
+    continuations when the batch completes; the runtime validates the
+    speculated outcome against authoritative history on arrival."""
+    eid: int
+    work: float
+    eu: float
+    on_done: Callable[[Simulator, SimJob], None]
+    on_evict: Callable[[], None]
+    dispatched: Optional[SimJob] = None
+
+
 class ModelStepService:
     """Owns the model-step queue for one runtime.
 
@@ -98,7 +120,8 @@ class ModelStepService:
 
     def __init__(self, sim: Simulator, rho: np.ndarray, *,
                  max_batch: int = 1, linger: float = 1.0,
-                 marginal: float = 0.3, metrics=None):
+                 marginal: float = 0.3, metrics=None,
+                 adaptive: bool = False):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if linger < 0:
@@ -109,10 +132,17 @@ class ModelStepService:
         self.linger = float(linger)
         self.marginal = float(marginal)
         self.metrics = metrics
+        self.adaptive = bool(adaptive)
         self._forming: List[ModelStepRequest] = []
+        self._spec_forming: List[SpecStepTicket] = []
         self._linger_job: Optional[SimJob] = None
         self._linger_deadline: float = 0.0
         self._batch_seq = 0
+        # adaptive-linger load signal: EMA of batchable-submit inter-arrival
+        # gaps (only maintained when ``adaptive`` — the fixed-linger path
+        # stays untouched)
+        self._last_arrival: Optional[float] = None
+        self._ema_gap: Optional[float] = None
 
     # ------------------------------------------------------------------
     def submit(self, req: ModelStepRequest) -> None:
@@ -126,7 +156,21 @@ class ModelStepService:
         if self.max_batch == 1 or not req.batchable or self.linger <= 0.0:
             self._dispatch([req])
             return
+        if self.adaptive:
+            if self._last_arrival is not None:
+                gap = max(self.sim.now - self._last_arrival, 0.0)
+                self._ema_gap = gap if self._ema_gap is None else (
+                    0.7 * self._ema_gap + 0.3 * gap)
+            self._last_arrival = self.sim.now
         self._forming.append(req)
+        # authoritative fill always wins: when the new member would overflow
+        # the batch past speculative passengers, the lowest-EU passenger is
+        # evicted — the batch is never delayed and never dispatched over-full
+        while (self._spec_forming
+               and len(self._forming) + len(self._spec_forming) > self.max_batch):
+            victim = min(self._spec_forming, key=lambda t: t.eu)
+            self._spec_forming.remove(victim)
+            victim.on_evict()
         if len(self._forming) >= self.max_batch:
             if self._linger_job is not None:
                 self.sim.cancel(self._linger_job.jid)
@@ -136,13 +180,56 @@ class ModelStepService:
         if self._linger_job is None:
             self._open_window()
 
+    # ------------------------------------------------------------------
+    # speculative slot-fill (strictly lower priority than authoritative)
+    def submit_speculative(self, ticket: SpecStepTicket) -> bool:
+        """Offer a speculative reasoning step an idle slot of the CURRENTLY
+        forming batch.  Returns False (nothing enqueued) unless a window is
+        open with a free slot — passengers never open windows, never trigger
+        dispatch, and never extend linger."""
+        if self.max_batch == 1 or self.linger <= 0.0:
+            return False
+        if self._linger_job is None:
+            return False
+        if len(self._forming) + len(self._spec_forming) >= self.max_batch:
+            return False
+        self._spec_forming.append(ticket)
+        return True
+
+    def withdraw_spec(self, ticket: SpecStepTicket) -> bool:
+        """Remove a still-forming passenger (squash before dispatch).  False
+        if it already dispatched or was evicted."""
+        if ticket in self._spec_forming:
+            self._spec_forming.remove(ticket)
+            return True
+        return False
+
+    def promote_spec(self, ticket: SpecStepTicket,
+                     req: ModelStepRequest) -> None:
+        """A still-forming passenger validated by the authoritative arrival:
+        it becomes a regular member of the same forming batch (normal
+        ``submit`` path — may fill-trigger dispatch)."""
+        self.withdraw_spec(ticket)
+        self.submit(req)
+
+    @property
+    def spec_slot_free(self) -> bool:
+        """True iff a speculative step submitted NOW would ride free: a
+        window is open with an idle slot.  Admission threads this into the
+        slot-marginal-cost term (a hypothesis whose MODEL step lands in a
+        forming under-full batch carries near-zero model-step cost in ΔI)."""
+        return (self.max_batch > 1 and self.linger > 0.0
+                and self._linger_job is not None
+                and len(self._forming) + len(self._spec_forming) < self.max_batch)
+
     def _open_window(self) -> None:
         """Zero-demand timer job holding the admission window open.  Zero
         demand ⇒ no interference and no QoS-sample pollution (the ``timer``
         meta flag excludes it from slowdown attribution, like the arrival
         timer); the event-driven sim would otherwise never wake at the
         deadline when nothing else completes in the window."""
-        self._linger_deadline = self.sim.now + self.linger
+        win = self._window_len()
+        self._linger_deadline = self.sim.now + win
 
         def fire(sim: Simulator, job: SimJob):
             self._linger_job = None
@@ -150,24 +237,47 @@ class ModelStepService:
 
         self._linger_job = self.sim.new_job(
             "model_batch_linger", np.zeros(RESOURCE_DIMS),
-            max(self.linger, 1e-9), speculative=False, on_complete=fire,
+            max(win, 1e-9), speculative=False, on_complete=fire,
             meta={"timer": True},
         )
         self.sim.start(self._linger_job)
 
+    def _window_len(self) -> float:
+        """Admission-window length for the batch being opened NOW.  Fixed
+        ``linger`` unless ``adaptive``: when batchable submits are trickling
+        (EMA inter-arrival gap exceeds the window) a second member is
+        unlikely to arrive in time, so the window shrinks proportionally —
+        the linger tax is only worth paying when coalescing is likely."""
+        if not self.adaptive or not self._ema_gap or self._ema_gap <= 0.0:
+            return self.linger
+        if self._ema_gap <= self.linger:
+            return self.linger
+        return max(self.linger * (self.linger / self._ema_gap), 1e-9)
+
     def _dispatch_forming(self) -> None:
         batch, self._forming = self._forming, []
+        spec, self._spec_forming = self._spec_forming, []
         if batch:
-            self._dispatch(batch, queued=True)
+            self._dispatch(batch, queued=True, spec=spec)
+        else:
+            # a window is only ever opened by an authoritative member, so
+            # passenger-only expiry is unreachable today; evict defensively
+            # rather than dispatch a batch speculation would have to pay for
+            for t in spec:
+                t.on_evict()
 
     def _dispatch(self, batch: List[ModelStepRequest],
-                  queued: bool = False) -> None:
+                  queued: bool = False,
+                  spec: Optional[List[SpecStepTicket]] = None) -> None:
         """Run one micro-batch as a single simulator job.  Batch demand is
         ONE model invocation's ρ (one accelerator slot — occupancy rides
         inside the job, not on the resource vector); duration follows the
         ``base + marginal·(b−1)`` curve.  Completion fires every member's
         continuation in submission order — the same order solo completions
-        at one instant would have fired."""
+        at one instant would have fired.  Speculative passengers ride FREE:
+        duration is computed from the authoritative works only, ``eids``
+        stays authoritative-only (QoS attribution fans over it), and
+        passengers' ``on_done`` fire after every authoritative member's."""
         b = len(batch)
         works = [r.work for r in batch]
         dur = batched_step_latency(works, self.marginal)
@@ -176,16 +286,26 @@ class ModelStepService:
         batch_id = self._batch_seq
         self._batch_seq += 1
         self._book_dispatch(batch, queued)
+        spec = spec or []
 
         def done(sim: Simulator, job: SimJob):
             for r in batch:
                 r.on_done(sim, job)
+            for t in spec:
+                t.on_done(sim, job)
 
+        meta = {"eid": batch[0].eid, "eids": [r.eid for r in batch],
+                "batch_size": b, "batch": batch_id}
+        if spec:
+            meta["spec_eids"] = [t.eid for t in spec]
         job = self.sim.new_job(
             name, self.rho, dur, speculative=False, on_complete=done,
-            meta={"eid": batch[0].eid, "eids": [r.eid for r in batch],
-                  "batch_size": b, "batch": batch_id},
+            meta=meta,
         )
+        for t in spec:
+            t.dispatched = job
+        if spec and self.metrics is not None:
+            self.metrics.spec_slot_fill_samples.append(len(spec))
         self.sim.start(job)
 
     def _book_dispatch(self, batch: List[ModelStepRequest],
@@ -234,7 +354,7 @@ class ModelStepService:
             # clears the forming batch the instant it reaches max_batch, so
             # a full-but-undispatched window state cannot exist
             return max(self._linger_deadline - self.sim.now, 0.0)
-        return self.linger
+        return self._window_len()
 
     @property
     def forming_size(self) -> int:

@@ -67,7 +67,9 @@ from repro.core.hypothesis import (
 )
 from repro.core.interference import Machine
 from repro.core.memo import MemoEntry, ResultStore, memo_key
-from repro.core.model_service import ModelStepRequest, ModelStepService
+from repro.core.model_service import (
+    ModelStepRequest, ModelStepService, SpecStepTicket,
+)
 from repro.core.patterns import PatternEngine
 from repro.core.safety import EligibilityPolicy, FULL_POLICY
 from repro.core.sandbox import AgentState, Sandbox
@@ -157,6 +159,49 @@ class EpisodeState:
 
 
 @dataclass
+class SpecStep:
+    """Lifecycle record of one speculative reasoning step (tentpole of the
+    two-segment speculation path).
+
+    ``assumed`` is the ENCODED authoritative history the prediction requires
+    at the reasoning boundary it targets: the branch's build context plus a
+    materialized prefix of the spine's TOOL results.  The agent reasons
+    after EVERY action, so every done-prefix of the spine is a valid
+    boundary to draft — a branch may hold several outstanding drafts at
+    successive boundaries (``full`` marks the one at the MODEL join itself,
+    which is what unlocks segment 2).  Validation on arrival compares
+    ``assumed`` against the encoded live history (``_consume_spec_steps``):
+    equality is a hit, a strict extension keeps the draft alive (the agent
+    has not reached that boundary yet), anything else is a dead prediction
+    and squashes.  Exactly one terminal ``outcome`` per submission —
+    accepted | squashed | evicted — with waste booked so that every
+    ``wasted_solo_seconds`` increment has a matching ``spec_solo_seconds``
+    contribution (wasted_frac <= 1 stays an invariant).  A passenger whose
+    branch resubmits after eviction counts as a NEW submission."""
+    es: "EpisodeState"
+    hr: HypRun
+    i: int                        # MODEL node index in hr.node_runs
+    assumed: List[Tuple]
+    work: float                   # speculative model-step solo work
+    eu: float                     # branch admission EU (eviction order)
+    full: bool = False            # boundary == the MODEL join (whole spine)
+    ticket: Optional[SpecStepTicket] = None
+    landed: bool = False          # batch completed; predicted outcome exists
+    outcome: str = ""             # terminal: accepted|squashed|evicted
+    pending_auth: bool = False    # authoritative step matched mid-flight:
+                                  # batch completion IS the reasoning step
+    pending_saved: float = 0.0    # latency credit to book on that completion
+
+    @property
+    def stage(self) -> str:
+        if self.landed:
+            return "done"
+        t = self.ticket
+        return "inflight" if (t is not None and t.dispatched is not None) \
+            else "forming"
+
+
+@dataclass
 class RuntimeConfig:
     mode: str = "bpaste"
     admission: str = "fused"      # "fused" (one-dispatch admit_beam kernel)
@@ -240,6 +285,26 @@ class RuntimeConfig:
                                       # on that member, so keep it short
     model_batch_marginal: float = 0.3  # per-extra-member cost fraction of
                                        # interference.batched_step_latency
+    spec_model_steps: bool = False    # speculative reasoning steps: two-
+                                      # segment hypothesis trees continue
+                                      # past the MODEL join with the mined
+                                      # table's top continuation, and the
+                                      # predicted step rides an idle slot of
+                                      # a forming under-full batch (strictly
+                                      # lower priority than authoritative
+                                      # fill; validate-on-arrival, mismatch
+                                      # squashes).  Default off = the whole
+                                      # path is inert and every decision is
+                                      # bit-identical to the flag's absence.
+                                      # Needs model_max_batch > 1 (passengers
+                                      # only exist where idle slots do).
+    adaptive_linger: bool = False     # load-aware batch admission window:
+                                      # when batchable submits are trickling
+                                      # (EMA inter-arrival gap > linger) the
+                                      # window shrinks proportionally — the
+                                      # linger tax is only paid when
+                                      # coalescing is likely.  Default off =
+                                      # fixed-linger path untouched.
     # ---- speculation-safety analysis (core/analysis.py) ----------------
     analysis: str = "warn"        # construction-time static pass (R1-R3)
                                   # over (policy, tool table, patterns):
@@ -328,6 +393,18 @@ class Metrics:
     model_queue_delay_samples: List[float] = field(default_factory=list)
     model_queue_delay_seconds: float = 0.0
     tenant_model_queue_delay: Dict[int, float] = field(default_factory=dict)
+    # speculative reasoning steps (RuntimeConfig.spec_model_steps): every
+    # submitted passenger terminates in exactly one of accepted / squashed /
+    # evicted (submitted == accepted + squashed + evicted at run end — the
+    # lifecycle property test pins this); saved-seconds is the authoritative
+    # step latency the accepted hits bought, slot-fill is passengers per
+    # dispatched batch that carried any
+    spec_steps_submitted: int = 0
+    spec_steps_accepted: int = 0
+    spec_steps_squashed: int = 0
+    spec_steps_evicted: int = 0
+    spec_step_saved_seconds: float = 0.0
+    spec_slot_fill_samples: List[int] = field(default_factory=list)
     # occupied beam slots (active hypotheses, launchable or mid-flight,
     # summed over all active episodes) at each shared admission pass —
     # beam fullness against the per-episode beam_k slot cap, NOT the
@@ -424,6 +501,18 @@ class Metrics:
                 float(np.mean(self.model_queue_delay_samples))
                 if self.model_queue_delay_samples else 0.0
             ),
+            "spec_steps_submitted": self.spec_steps_submitted,
+            "spec_steps_accepted": self.spec_steps_accepted,
+            "spec_steps_squashed": self.spec_steps_squashed,
+            "spec_steps_evicted": self.spec_steps_evicted,
+            "spec_step_saved_seconds": self.spec_step_saved_seconds,
+            "spec_squash_rate": (
+                self.spec_steps_squashed / max(self.spec_steps_submitted, 1)
+            ),
+            "spec_slot_fill": (
+                float(np.mean(self.spec_slot_fill_samples))
+                if self.spec_slot_fill_samples else 0.0
+            ),
             "sanitize_findings": self.sanitize_findings,
             "race_masked": self.race_masked,
         }
@@ -482,14 +571,24 @@ class BPasteRuntime:
         self.tools = tools
         self.rng = np.random.default_rng(rcfg.seed)
         self.engine = engine
+        # speculative reasoning steps only exist where idle batch slots do:
+        # batching must be on, and serial mode is the no-system baseline
+        self._spec_on = (rcfg.spec_model_steps and rcfg.mode != "serial"
+                         and rcfg.model_max_batch > 1)
         # tree assembly gets the full packed-table budget (rcfg.max_nodes
-        # minus the MODEL join): siblings must not eat the spine's depth.
-        # The chain baseline keeps the builder's historical default bound.
-        builder_nodes = (rcfg.max_nodes - 1 if rcfg.assembly == "tree"
-                         else HypothesisBuilder.max_nodes)
-        self.builder = HypothesisBuilder(engine, tools=tools,
-                                         assembly=rcfg.assembly,
-                                         max_nodes=builder_nodes)
+        # minus the MODEL join; two-segment assembly also reserves the
+        # post-MODEL continuation's up-to-3 nodes): siblings must not eat
+        # the spine's depth, and total nodes must stay inside the scorer's
+        # packed N.  The chain baseline keeps the builder's historical bound.
+        if rcfg.assembly == "tree":
+            builder_nodes = (max(rcfg.max_nodes - 4, 1) if self._spec_on
+                             else rcfg.max_nodes - 1)
+        else:
+            builder_nodes = HypothesisBuilder.max_nodes
+        self.builder = HypothesisBuilder(
+            engine, tools=tools, assembly=rcfg.assembly,
+            max_nodes=builder_nodes,
+            spec_steps=self._spec_on and rcfg.assembly == "tree")
         self.scorer = Scorer(machine, lam=rcfg.lam, mu=rcfg.mu,
                              k_max=rcfg.beam_k, n_max=rcfg.max_nodes)
         self.metrics = Metrics()
@@ -565,7 +664,11 @@ class BPasteRuntime:
             self.sim, tools["model_step"].rho.as_array(),
             max_batch=rcfg.model_max_batch, linger=rcfg.model_batch_linger,
             marginal=rcfg.model_batch_marginal, metrics=self.metrics,
+            adaptive=rcfg.adaptive_linger,
         )
+        # live speculative reasoning steps, keyed by tenant eid — settled
+        # (removed) exactly once each via _settle_spec_step
+        self._spec_steps: Dict[int, List[SpecStep]] = {}
         # construction-time static safety pass (core/analysis.py R1-R3):
         # pure — dry-runs on throwaway state, no RNG, no hypothesis ids —
         # so it cannot perturb a single scheduling decision.  R4 (barrier
@@ -667,8 +770,16 @@ class BPasteRuntime:
         service.  Under ``model_max_batch=1`` the service dispatches a solo
         job synchronously (same name/demand/work as the pre-service code);
         with batching on, the step may coalesce with other tenants' steps
-        into one micro-batched model invocation."""
+        into one micro-batched model invocation.
+
+        Speculative reasoning steps validate ON ARRIVAL here: a live
+        speculative step whose assumed history matches the authoritative one
+        replaces this submit entirely (its batch already computed — or is
+        computing, or will compute — the very step the agent is asking
+        for); divergent predictions squash before anything dispatches."""
         step = es.ep.steps[es.step_idx]
+        if self._spec_on and self._consume_spec_steps(es, step):
+            return
 
         def done(sim: Simulator, job: SimJob):
             self._on_reasoning_done(es)
@@ -676,7 +787,7 @@ class BPasteRuntime:
         self.model_service.submit(ModelStepRequest(
             eid=es.ep.eid, name=f"model[e{es.ep.eid}.{es.step_idx}]",
             work=step.model_work, on_done=done,
-            batchable=getattr(step, "batchable", True),
+            batchable=step.batchable,
         ))
 
     def _on_reasoning_done(self, es: EpisodeState):
@@ -687,6 +798,210 @@ class BPasteRuntime:
             self._acting.add(es.idx)
         self._mark_dirty(es)
         # Phase 1 happens inside the tick that follows this completion.
+
+    # ==================================================================
+    # speculative reasoning steps (RuntimeConfig.spec_model_steps)
+    # ==================================================================
+    @staticmethod
+    def _enc_call(tool: str, result) -> Tuple:
+        """Canonical encoding of one authoritative tool invocation for
+        validate-on-arrival comparison.  Deliberately (tool, result) and
+        NOT args: authoritative events carry the step's full argument dict
+        while spine nodes resolve only the binding subset the pattern
+        mined, so arg equality is unobtainable even on a perfectly
+        followed spine.  Tool results embed the arguments that shaped
+        them (and on the reuse path the event's result IS the node's
+        result object), so (tool, repr(result)) is the discriminating
+        fingerprint; a false accept can only mis-credit latency — the
+        reasoning outcome itself is read from the authoritative script."""
+        return (tool, repr(result))
+
+    def _enc(self, e: Event) -> Tuple:
+        return self._enc_call(e.tool, e.result)
+
+    def _submit_spec_step(self, es: EpisodeState, hr: HypRun, i: int) -> bool:
+        """Offer a branch's next reasoning boundary to an idle slot of the
+        forming batch.
+
+        The agent reasons after EVERY action, so the draft targets the
+        deepest boundary the branch can currently vouch for: build context
+        plus the longest materialized prefix of the spine (``full`` when
+        that prefix is the whole spine — the MODEL join itself, whose
+        landing unlocks segment 2).  Fires only when the service reports a
+        free slot — passengers never open windows or delay dispatch.  The
+        ``assumed`` history is frozen at submit time; everything after is
+        validate-on-arrival."""
+        nr = hr.node_runs[i]
+        if (not self._spec_on or nr.status != "pending"
+                or i != hr.hyp.model_idx):
+            return False
+        if len(es.history) < hr.base_len:
+            return False          # build-context action still in flight
+        if not self.model_service.spec_slot_free:
+            return False
+        assumed = [self._enc(e) for e in es.history[:hr.base_len]]
+        full = True
+        for j in hr.path_to(i)[:-1]:
+            p = hr.node_runs[j]
+            if p.node.kind != NodeKind.TOOL:
+                continue
+            if p.status not in ("done", "reused", "promoted"):
+                full = False      # prefix ends: result not materialized
+                break             # (missing args or a still-running node)
+            assumed.append(self._enc_call(p.run_tool, p.result))
+        actual = [self._enc(e) for e in es.history]
+        n = len(actual)
+        if not (len(assumed) > n and assumed[:n] == actual):
+            return False          # no unconsumed boundary (or divergent)
+        live = self._spec_steps.get(es.ep.eid, ())
+        if any(ss.assumed == assumed for ss in live):
+            return False          # this boundary is already drafted
+        work = self.tools["model_step"].base_latency
+        ss = SpecStep(es=es, hr=hr, i=i, assumed=assumed, work=work,
+                      eu=hr.eu, full=full)
+
+        def spec_done(sim: Simulator, job: SimJob, ss=ss):
+            if ss.outcome:
+                return            # settled mid-flight (squash/prune)
+            ss.landed = True
+            es2 = ss.es
+            nr2 = ss.hr.node_runs[ss.i]
+            if ss.pending_auth:
+                # the authoritative step validated against this passenger
+                # while its batch was mid-flight: this completion IS the
+                # reasoning step — credit the remaining-work saving
+                self._settle_spec_step(ss, "accepted",
+                                       saved=ss.pending_saved)
+                if ss.full and nr2.status == "pending":
+                    nr2.status = "reused"
+                self._mark_dirty(es2)
+                self._on_reasoning_done(es2)
+                return
+            if ss.hr.status != "active":
+                self._settle_spec_step(ss, "squashed")
+                return
+            if ss.full and nr2.status == "pending":
+                # the MODEL join's own reasoning outcome materialized: the
+                # post-MODEL segment becomes launchable (frontier ready on
+                # done|reused).  Partial-boundary drafts stay live for
+                # validation but never open segment 2 — their context is
+                # not the join's.
+                nr2.status = "done"
+                self._mark_dirty(es2)
+
+        def on_evict(ss=ss):
+            self._settle_spec_step(ss, "evicted")
+
+        ticket = SpecStepTicket(eid=es.ep.eid, work=work, eu=hr.eu,
+                                on_done=spec_done, on_evict=on_evict)
+        ss.ticket = ticket
+        if not self.model_service.submit_speculative(ticket):
+            return False
+        self._spec_steps.setdefault(es.ep.eid, []).append(ss)
+        self.metrics.spec_steps_submitted += 1
+        # nr.status stays "pending": the node is a reusable drafting handle
+        # — deeper boundaries are drafted as more of the spine materializes
+        # (the per-boundary dedup above prevents duplicates).
+        return True
+
+    def _consume_spec_steps(self, es: EpisodeState, step) -> bool:
+        """Validate-on-arrival against the live speculative steps when the
+        agent reaches a reasoning step.  Dead predictions (assumed history
+        neither equal to nor a strict extension of the authoritative one)
+        squash immediately; the best hit — completed beats mid-flight beats
+        still-forming — replaces the authoritative submit.  Returns True
+        iff the submit was replaced."""
+        live = self._spec_steps.get(es.ep.eid)
+        if not live:
+            return False
+        actual = [self._enc(e) for e in es.history]
+        n = len(actual)
+        rank = {"done": 0, "inflight": 1, "forming": 2}
+        hit: Optional[SpecStep] = None
+        for ss in list(live):
+            if ss.assumed == actual:
+                if hit is None or rank[ss.stage] < rank[hit.stage]:
+                    hit = ss
+            elif not (len(ss.assumed) > n and ss.assumed[:n] == actual):
+                self._settle_spec_step(ss, "squashed")
+        if hit is None:
+            return False
+        nr = hit.hr.node_runs[hit.i]
+        if hit.stage == "done":
+            # the predicted step already computed: zero-latency reuse
+            self._settle_spec_step(hit, "accepted", saved=step.model_work)
+            if hit.full and nr.status in ("pending", "done"):
+                nr.status = "reused"
+                self._mark_dirty(es)
+            self._on_reasoning_done(es)
+            return True
+        if hit.stage == "inflight":
+            job = hit.ticket.dispatched
+            remaining = max(self.sim.settled_remaining(job), 0.0)
+            if remaining >= step.model_work:
+                # waiting out the batch would cost more than dispatching
+                # fresh: not a win — leave the passenger to settle on its
+                # own (it goes dead once this step's action lands)
+                return False
+            hit.pending_auth = True
+            hit.pending_saved = step.model_work - remaining
+            return True
+        # still forming: the passenger becomes a regular member of the SAME
+        # forming batch (authoritative submit path — may fill-trigger);
+        # nothing was saved, but nothing was wasted either
+
+        def done(sim: Simulator, job: SimJob):
+            self._on_reasoning_done(es)
+
+        ticket = hit.ticket
+        self._settle_spec_step(hit, "accepted", saved=0.0)
+        if hit.full and nr.status == "pending":
+            nr.status = "reused"
+            self._mark_dirty(es)
+        self.model_service.promote_spec(ticket, ModelStepRequest(
+            eid=es.ep.eid, name=f"model[e{es.ep.eid}.{es.step_idx}]",
+            work=step.model_work, on_done=done,
+            batchable=step.batchable,
+        ))
+        return True
+
+    def _settle_spec_step(self, ss: SpecStep, outcome: str,
+                          saved: float = 0.0) -> None:
+        """Book one speculative step's terminal outcome exactly once.
+
+        Waste invariant: a dispatched passenger's work enters
+        ``spec_solo_seconds`` whatever its fate (it was executed);
+        squash-after-dispatch adds the SAME work to ``wasted_solo_seconds``
+        — so wasted_frac <= 1 holds by construction.  Forming-stage
+        terminals (evicted, or squashed before dispatch) book nothing:
+        no cycles were burned."""
+        if ss.outcome:
+            return
+        stage = ss.stage          # capture before mutating
+        ss.outcome = outcome
+        live = self._spec_steps.get(ss.es.ep.eid)
+        if live is not None and ss in live:
+            live.remove(ss)
+        dispatched = (ss.ticket is not None
+                      and ss.ticket.dispatched is not None)
+        if outcome == "accepted":
+            self.metrics.spec_steps_accepted += 1
+            self.metrics.spec_step_saved_seconds += saved
+            if dispatched:
+                self.metrics.spec_solo_seconds += ss.work
+            return
+        if outcome == "squashed":
+            self.metrics.spec_steps_squashed += 1
+            if stage == "forming" and ss.ticket is not None:
+                self.model_service.withdraw_spec(ss.ticket)
+            elif dispatched:
+                self.metrics.spec_solo_seconds += ss.work
+                self.metrics.wasted_solo_seconds += ss.work
+        else:                     # evicted (service already dropped ticket)
+            self.metrics.spec_steps_evicted += 1
+        # non-accepted terminal: nothing to revert — the MODEL node stayed
+        # "pending" while drafting, so a still-active branch resubmits on
+        # the next frontier pass (counted as a new submission).
 
     def _finish_action(self, es: EpisodeState, result: Any, t_start: float):
         """``t_start`` is the action's WALL start time (``job.started_at``) —
@@ -1236,6 +1551,13 @@ class BPasteRuntime:
             elif nr.status == "done":
                 self.metrics.wasted_solo_seconds += job.work
             nr.job = None
+        # live speculative reasoning steps die with their branch: forming
+        # passengers withdraw from the service, dispatched ones settle their
+        # burn as waste (their batch completion sees the terminal outcome
+        # and ignores them)
+        for ss in list(self._spec_steps.get(es.ep.eid, ())):
+            if ss.hr is hr:
+                self._settle_spec_step(ss, "squashed")
 
     def _squash_all(self, es: EpisodeState):
         # the compaction below rewrites hyp_runs even when nothing was
@@ -1721,6 +2043,20 @@ class BPasteRuntime:
         # step would see in the batch admission window — 0.0 under the
         # max_batch=1 baseline, keeping scoring bit-identical
         model_delay = self.model_service.expected_unlock_delay()
+        # slot-marginal model-step cost (spec_model_steps): a hypothesis
+        # whose speculative MODEL step would ride an idle slot of the
+        # forming under-full batch pays ~0, one that would have to open a
+        # new batch pays the full dispatch latency.  None when the path is
+        # off OR every cost is zero — a zeros vector is an IEEE-exact no-op
+        # in all three kernels, and None keeps the admission signature (and
+        # the warm-start hit rate) identical to the flag's absence.
+        spec_costs = None
+        if self._spec_on and not self.model_service.spec_slot_free:
+            base = self.tools["model_step"].base_latency
+            sc = np.array([base if hr.hyp.model_idx >= 0 else 0.0
+                           for hr in cand])
+            if np.any(sc):
+                spec_costs = sc
         # Verified admission warm-start: the greedy/fused kernels are
         # deterministic functions of exactly the inputs signed below (see
         # admission_signature), so when nothing a decision depends on moved
@@ -1732,7 +2068,8 @@ class BPasteRuntime:
         if self.rcfg.warm_admit:
             sig = admission_signature(
                 (hr.hyp.hid for hr in cand), slack, budget, auth_rho,
-                weights, memo_masks, memo_rho, model_delay)
+                weights, memo_masks, memo_rho, model_delay,
+                spec_costs=spec_costs)
         if (sig is not None and self._warm_admitted is not None
                 and sig == self._warm_sig):
             t0 = time.perf_counter()
@@ -1761,7 +2098,7 @@ class BPasteRuntime:
                 hyps, self.scorer, slack, budget, auth_rho,
                 idle_window=self.rcfg.idle_window, weights=weights,
                 memo_masks=memo_masks, memo_rho=memo_rho,
-                model_delay=model_delay,
+                model_delay=model_delay, spec_costs=spec_costs,
             )
         else:
             if len(self._static_rows) > 8192:
@@ -1771,7 +2108,7 @@ class BPasteRuntime:
                 idle_window=self.rcfg.idle_window,
                 packed=self._packed_for(cand), weights=weights,
                 memo_masks=memo_masks, memo_rho=memo_rho,
-                model_delay=model_delay,
+                model_delay=model_delay, spec_costs=spec_costs,
                 small_beam_threshold=self.rcfg.host_admit_max,
                 static_cache=self._static_rows if self.rcfg.warm_admit
                 else None,
@@ -1876,7 +2213,25 @@ class BPasteRuntime:
             open_[i], ready[i], preponly[i] = False, False, po
             if not op:
                 continue
-            if kind == NodeKind.MODEL or nr.node.level == SafetyLevel.NON_SPECULATIVE:
+            if kind == NodeKind.MODEL:
+                if (self._spec_on and i == hr.hyp.model_idx
+                        and hr.hyp.spine_leaf >= 0):
+                    # speculative reasoning step: surfaced while "pending"
+                    # — the submit path decides which boundary (deepest
+                    # materialized spine prefix) is draftable, so neither
+                    # full-spine readiness nor a missing-args bound blocks
+                    # drafting the boundaries BEFORE the bound.  The
+                    # post-MODEL segment opens only when the whole spine is
+                    # materialized AND the join's own predicted outcome
+                    # landed ("done") or the authoritative step validated
+                    # it ("reused").
+                    rd_spine = ready.get(hr.hyp.spine_leaf, False)
+                    if nr.status == "pending":
+                        out.append(i)
+                    open_[i] = True
+                    ready[i] = rd_spine and nr.status in ("done", "reused")
+                continue
+            if nr.node.level == SafetyLevel.NON_SPECULATIVE:
                 continue
             if kind == NodeKind.BARRIER:
                 open_[i], ready[i] = allow_staged, rd
@@ -1957,6 +2312,10 @@ class BPasteRuntime:
 
     def _start_spec_node(self, es: EpisodeState, hr: HypRun, i: int) -> bool:
         nr = hr.node_runs[i]
+        if nr.node.kind == NodeKind.MODEL:
+            # speculative reasoning step: rides an idle slot of the forming
+            # batch instead of a simulator job of its own
+            return self._submit_spec_step(es, hr, i)
         if nr.waiting:
             return False                  # subscribed to an in-flight twin
         if nr.node.kind == NodeKind.TOOL and nr.node.bindings:

@@ -301,7 +301,7 @@ def eu_given_admitted(l_exec, delta_o, delta_u, q, rho, k_valid,
 def score_beam(
     node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid,
     memo_mask, admitted_rho, cap, lam, mu, idle_window, model_delay,
-    n_nodes: int,
+    spec_cost, n_nodes: int,
 ):
     """Vectorized EU for every hypothesis given the admitted demand.
 
@@ -309,12 +309,19 @@ def score_beam(
     zero interference exposure); ``rho`` must already exclude them.
     ``model_delay`` discounts ΔU by the model-step service's expected
     queue+batch-window delay (see ``static_gain_terms``).
+    ``spec_cost`` (K,) is the slot-marginal model-step cost of the
+    hypothesis's speculative MODEL step: ~0 when it would ride an idle slot
+    of a forming under-full batch, the full dispatch latency when it would
+    have to open a new batch.  It enters the objective as an interference
+    term (μ-scaled, subtracted from the gain) BEFORE ΔI — zeros are an
+    IEEE-exact no-op, keeping non-speculative scoring bit-identical.
 
     Returns (eu (K,), delta_o, delta_u, delta_i)."""
     l_solo, l_exec, delta_o, delta_u = static_gain_terms(
         node_lat, node_prob, node_mask, prefix_mask, adj, idle_window,
         n_nodes, memo_mask=memo_mask, model_delay=model_delay,
     )
+    delta_o = delta_o - mu * spec_cost
     eu, delta_i = eu_given_admitted(
         l_exec, delta_o, delta_u, q, rho, k_valid, admitted_rho, cap,
         lam, mu, idle_window,
@@ -361,6 +368,7 @@ class Scorer:
         memo_masks: Optional[np.ndarray] = None,
         memo_rho: Optional[np.ndarray] = None,
         model_delay: float = 0.0,
+        spec_costs: Optional[np.ndarray] = None,
     ) -> Tuple[np.ndarray, PackedBeam, dict]:
         """``memo_masks`` (len(hyps), N) / ``memo_rho`` (len(hyps), R) carry
         the store-reuse term: per-node memoized flags and the matching
@@ -368,13 +376,18 @@ class Scorer:
         (like fairness weights) — the PackedBeam stays store-agnostic, so
         runtime pack caches remain valid as the store fills.  ``model_delay``
         is the model-step service's expected unlock delay (a traced scalar:
-        it changes every tick without recompiling)."""
+        it changes every tick without recompiling).  ``spec_costs``
+        (len(hyps),) is the per-hypothesis slot-marginal model-step cost
+        (see ``score_beam``); None means zeros (bit-identical no-op)."""
         pb = pack_beam(hyps, self.k_max, self.n_max)
         K = pb.q.shape[0]
         mm = np.zeros((K, self.n_max))
+        sc = np.zeros(K)
         rho = pb.rho
         if memo_masks is not None:
             mm[: len(hyps), :] = np.asarray(memo_masks, float)
+        if spec_costs is not None:
+            sc[: len(hyps)] = np.asarray(spec_costs, float)
         if memo_rho is not None:
             rho = rho.copy()
             rho[: len(hyps), :] = np.asarray(memo_rho, float)
@@ -382,7 +395,8 @@ class Scorer:
             pb.node_lat, pb.node_prob, pb.node_mask, pb.prefix_mask, pb.adj,
             pb.q, rho, pb.k_valid, jnp.asarray(mm),
             jnp.asarray(admitted_rho), jnp.asarray(self.machine.cap_array()),
-            self.lam, self.mu, idle_window, model_delay, n_nodes=self.n_max,
+            self.lam, self.mu, idle_window, model_delay, jnp.asarray(sc),
+            n_nodes=self.n_max,
         )
         detail = {
             "delta_o": np.asarray(do), "delta_u": np.asarray(du),
@@ -398,6 +412,7 @@ class Scorer:
         memo_masks: Optional[np.ndarray] = None,
         memo_rho: Optional[np.ndarray] = None,
         model_delay: float = 0.0,
+        spec_costs: Optional[np.ndarray] = None,
     ) -> np.ndarray:
         """EU for EVERY hypothesis, chunked over ``k_max``-sized beams.
 
@@ -417,6 +432,8 @@ class Scorer:
                 memo_rho=None if memo_rho is None
                 else memo_rho[i:i + self.k_max],
                 model_delay=model_delay,
+                spec_costs=None if spec_costs is None
+                else spec_costs[i:i + self.k_max],
             )
             out.append(eu[: len(chunk)])
         return np.concatenate(out)

@@ -54,11 +54,16 @@ class GanttRecorder:
         if eids is None:
             eid = job.meta.get("eid")
             eids = [eid] if eid is not None else []
+        # speculative reasoning-step passengers riding a batch's idle
+        # slots: meta["eids"] stays authoritative-only (QoS fans over it),
+        # so the free riders surface through meta["spec_eids"]
+        spec_eids = list(job.meta.get("spec_eids") or ())
         return {
             "job": job.name,
             "jid": job.jid,
             "tenant": eids[0] if eids else None,
             "tenants": list(eids),
+            "spec_tenants": spec_eids,
             "t_start": t0,
             "t_end": t1,
             "speculative": bool(job.speculative),
@@ -80,10 +85,13 @@ class GanttRecorder:
 
     def by_tenant(self) -> Dict[Optional[int], List[Dict[str, Any]]]:
         """Rows grouped per tenant (batched jobs appear under EVERY member
-        tenant — each of them occupied the accelerator for that span)."""
+        tenant — each of them occupied the accelerator for that span;
+        speculative passengers count too, they rode the same dispatch)."""
         out: Dict[Optional[int], List[Dict[str, Any]]] = {}
         for r in self.rows:
-            for eid in (r["tenants"] or [None]):
+            members = list(r["tenants"]) + [e for e in r.get(
+                "spec_tenants", ()) if e not in r["tenants"]]
+            for eid in (members or [None]):
                 out.setdefault(eid, []).append(r)
         return out
 
@@ -91,9 +99,11 @@ class GanttRecorder:
 def render_ascii(rows: List[Dict[str, Any]], width: int = 72,
                  max_lanes: int = 40) -> str:
     """Seconds-scale ASCII Gantt: one lane per row (capped), ``=`` for
-    authoritative segments, ``~`` for speculative ones, ``x`` marking a
-    preempted end.  Good enough to eyeball overlap structure in a terminal;
-    the JSON dump is the machine-readable artifact."""
+    authoritative segments, ``~`` for speculative ones, ``%`` for batched
+    dispatches whose idle slots carry speculative reasoning-step
+    passengers (the label appends ``+Ns``), ``x`` marking a preempted
+    end.  Good enough to eyeball overlap structure in a terminal; the
+    JSON dump is the machine-readable artifact."""
     if not rows:
         return "(empty timeline)"
     t1 = max(r["t_end"] for r in rows)
@@ -105,7 +115,10 @@ def render_ascii(rows: List[Dict[str, Any]], width: int = 72,
     for r in lanes:
         a = int((r["t_start"] - t0) / span * (width - 1))
         b = max(int((r["t_end"] - t0) / span * (width - 1)), a + 1)
-        ch = "~" if r["speculative"] else "="
+        if r.get("spec_tenants"):
+            ch = "%"
+        else:
+            ch = "~" if r["speculative"] else "="
         bar = [" "] * width
         for x in range(a, b):
             bar[x] = ch
@@ -122,4 +135,6 @@ def _label(r: Dict[str, Any]) -> str:
     tag = f"e{r['tenant']}" if r["tenant"] is not None else "--"
     if r["batch"] is not None:
         tag = f"b{r['batch']}"
+    if r.get("spec_tenants"):
+        tag += f"+{len(r['spec_tenants'])}s"
     return f"{tag} {r['job'][:28]}"

