@@ -43,6 +43,21 @@ model_service.py `submit_speculative`).  Passengers ride free (batch
 duration is set by authoritative works only) and validate on arrival, so
 the row must show ``mean_auth_slowdown=1.000`` and zero QoS violations
 while beating the plain ``+batch`` makespan.
+
+The ``serving/open_*`` rows are PR 10's headline: an OPEN-LOOP
+goodput-vs-offered-load sweep.  Tenants arrive as a sustained exponential
+process (``WorkloadConfig.open_loop_rate``, pulled lazily through
+``workload.open_loop_source``) instead of from a frozen roster, and each
+mode is swept over offered rates on the edge box until its p95 sojourn
+blows through the SLO — the max rate still inside it is the mode's
+SATURATION KNEE, the sustained-load number the paper's edge-serving claim
+actually rests on.  The full bpaste stack (memo + batch + specstep +
+load-shedding admission + adaptive linger) must hold the SLO at a rate
+≥ serial's, with ``mean_auth_slowdown=1.000`` at EVERY swept rate —
+under overload the shedding ladder prices speculation out (the
+``shed=...`` column) before any authoritative QoS violation appears.
+``check_budget.py`` watches the knee against
+``baselines/serving_knee.json``.
 """
 from __future__ import annotations
 
@@ -52,7 +67,9 @@ from repro.core.events import ResourceVector
 from repro.core.interference import Machine
 from repro.core.patterns import PatternEngine
 from repro.core.runtime import run_mode
-from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episodes
+from repro.core.workload import (
+    WorkloadConfig, episodes_to_traces, make_episodes, open_loop_source,
+)
 
 # 12-core / 4-accelerator serving box: c=8 saturates on tool work, not on
 # the model-step queue (see module docstring)
@@ -84,6 +101,31 @@ MODES = {
 }
 
 
+# ---- open-loop sustained-load sweep (PR 10) --------------------------
+# p95-sojourn SLO the knee is judged against: calibrated so the serial
+# baseline holds it only at the lightest swept rate on the edge box
+# (16 tenants, 4 serving slots) while the full stack holds it 4x further
+SLO_P95_SOJOURN = 120.0
+OPEN_CONC = 4                 # serving slots: fewer than tenants, so an
+                              # arrival backlog (the shedding signal) can
+                              # actually form under overload
+OPEN_N_TEST = 16
+# offered rates (episodes/sec); the knee must land strictly inside the
+# swept range for both modes or the report is a lie by truncation
+OPEN_RATES_SMOKE = [0.05, 0.1, 0.2]
+OPEN_RATES_FULL = [0.05, 0.1, 0.15, 0.2, 0.3]
+# sweep mode label -> run_mode kwargs.  "bpaste+stack" is the full ladder:
+# store + batched model steps + speculative reasoning steps + load-shedding
+# admission + load-aware linger — everything the graceful-degradation
+# story needs on at once.
+OPEN_MODES = {
+    "serial": dict(mode="serial", memo=False),
+    "bpaste+stack": dict(mode="bpaste", memo=True, model_max_batch=BATCH,
+                         spec_model_steps=True, shed_alpha=1.0,
+                         adaptive_linger=True),
+}
+
+
 def _fit_engine(n_train: int) -> PatternEngine:
     train = make_episodes(WorkloadConfig(seed=1, n_episodes=n_train))
     return PatternEngine(context_len=2, min_support=3).fit(
@@ -97,6 +139,62 @@ def _cell(test, engine, label: str, conc: int, machine) -> Dict:
                  model_max_batch=max_batch, spec_model_steps=spec)
     s = m.summary()
     return s
+
+
+def _open_cell(engine, label: str, rate: float) -> Dict:
+    """One open-loop cell: sustained arrivals at ``rate`` episodes/sec,
+    served from the lazy source.  Adds per-tenant SLO accounting: tenants
+    whose ARRIVAL->completion sojourn blew the SLO, and goodput — tenants
+    served inside it per second of wall clock."""
+    kw = dict(OPEN_MODES[label])
+    mode = kw.pop("mode")
+    cfg = WorkloadConfig(seed=42, n_episodes=OPEN_N_TEST,
+                         open_loop_rate=rate,
+                         shared_frac=0.5, shared_pool=2)
+    m = run_mode([], engine, mode, THOR_BOX, seed=7,
+                 max_concurrent_episodes=OPEN_CONC,
+                 episode_source=open_loop_source(cfg), **kw)
+    s = m.summary()
+    soj = list(m.tenant_sojourn.values())
+    viol = sum(1 for x in soj if x > SLO_P95_SOJOURN)
+    s["slo_violations"] = viol
+    s["goodput"] = (len(soj) - viol) / max(s["makespan"], 1e-9)
+    return s
+
+
+def _open_row(label: str, rate: float, s: Dict) -> Dict:
+    trunc = " TRUNCATED" if s["truncated"] else ""
+    return {
+        "name": f"serving/open_{label}_r{rate:g}",
+        "us_per_call": 0.0,
+        "derived": (f"offered_rate={rate:.2f} "
+                    f"p95_sojourn={s['p95_sojourn']:.1f} "
+                    f"goodput={s['goodput']:.4f} "
+                    f"slo_violations={s['slo_violations']:.0f} "
+                    f"shed_passes={s['shed_passes']:.0f} "
+                    f"shed_peak_backlog={s['shed_peak_backlog']:.0f} "
+                    f"mean_auth_slowdown={s['mean_auth_slowdown']:.3f} "
+                    f"qos_violations={s['qos_violations']:.0f}"
+                    f"{trunc}"),
+    }
+
+
+def _knee_row(label: str, rates: List[float], cells: Dict) -> Dict:
+    """The mode's saturation knee: the max swept offered rate whose p95
+    sojourn still holds the SLO (0 when even the lightest rate blows it)."""
+    knee, p95_at_knee = 0.0, 0.0
+    for rate in rates:
+        s = cells[(label, rate)]
+        if s["p95_sojourn"] <= SLO_P95_SOJOURN:
+            knee, p95_at_knee = rate, s["p95_sojourn"]
+    return {
+        "name": f"serving/open_knee_{label}",
+        "us_per_call": 0.0,
+        "derived": (f"knee_rate={knee:.2f} "
+                    f"slo_p95={SLO_P95_SOJOURN:.0f} "
+                    f"p95_at_knee={p95_at_knee:.1f} "
+                    f"rates_swept={len(rates):.0f}"),
+    }
 
 
 def _row(name: str, s: Dict) -> Dict:
@@ -202,4 +300,16 @@ def run(smoke: bool = False) -> List[Dict]:
         rows.append(_compare_row("serving/thor_c8_specstep_vs_batch",
                                  thor["bpaste+memo+batch"],
                                  thor["bpaste+memo+batch+specstep"]))
+    # open-loop sustained-load sweep: goodput vs offered rate, per-mode
+    # saturation knee (PR 10 headline — see module docstring).  In the
+    # smoke tier too: the knee rows are what CI's bench-smoke artifact
+    # tracks against baselines/serving_knee.json.
+    open_rates = OPEN_RATES_SMOKE if smoke else OPEN_RATES_FULL
+    open_cells: Dict = {}
+    for label in OPEN_MODES:
+        for rate in open_rates:
+            s = _open_cell(engine, label, rate)
+            open_cells[(label, rate)] = s
+            rows.append(_open_row(label, rate, s))
+        rows.append(_knee_row(label, open_rates, open_cells))
     return rows

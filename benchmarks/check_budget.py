@@ -31,6 +31,8 @@ WARM_CUT_MIN = 1.1
 SPEC_SQUASH_MAX = 0.8
 BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
                         "scheduler_sweep.json")
+KNEE_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                             "serving_knee.json")
 
 
 def _derived_num(row, key: str):
@@ -73,6 +75,50 @@ def check_spec_steps(rows) -> list:
             warnings.append(
                 f"thor_c8 specstep mean_auth_slowdown={slow:.3f} — "
                 f"passengers must ride free (expected exactly 1.000)")
+    return warnings
+
+
+def check_knee(rows, knee_base) -> list:
+    """Non-blocking watch over the open-loop sweep (ISSUE 10): warn when
+    a mode's saturation knee regresses below the checked-in baseline,
+    when the full bpaste stack no longer sustains at least the serial
+    knee, or when any swept rate taxes authoritative work (the shed
+    ladder must price out speculation strictly before QoS suffers)."""
+    warnings = []
+    base_knees = knee_base.get("knees", {})
+    knees = {}
+    for r in rows:
+        name = r.get("name", "")
+        if name.startswith("serving/open_knee_"):
+            label = name[len("serving/open_knee_"):]
+            knee = _derived_num(r, "knee_rate")
+            if knee is not None:
+                knees[label] = knee
+                ref = base_knees.get(label)
+                if ref is not None and knee < ref:
+                    warnings.append(
+                        f"{name}: saturation knee {knee:g} eps/s is below "
+                        f"the checked-in baseline ({ref:g}) — sustainable "
+                        f"load under the p95-sojourn SLO regressed")
+        elif name.startswith("serving/open_"):
+            slow = _derived_num(r, "mean_auth_slowdown")
+            if slow is not None and slow > 1.0:
+                warnings.append(
+                    f"{name}: mean_auth_slowdown={slow:.3f} under open-loop "
+                    f"load — speculation must shed before authoritative "
+                    f"work slows (expected exactly 1.000)")
+            qos = _derived_num(r, "qos_violations")
+            if qos:
+                warnings.append(
+                    f"{name}: {qos:g} QoS violations under open-loop load "
+                    f"— the shedding ladder failed to protect "
+                    f"authoritative deadlines")
+    stack, serial = knees.get("bpaste+stack"), knees.get("serial")
+    if stack is not None and serial is not None and stack < serial:
+        warnings.append(
+            f"open-loop sweep: bpaste+stack knee ({stack:g} eps/s) fell "
+            f"below the serial knee ({serial:g}) — the stack no longer "
+            f"buys sustained-load headroom")
     return warnings
 
 
@@ -126,7 +172,13 @@ def main() -> int:
     except (OSError, ValueError) as e:
         print(f"::warning::budget check skipped: {e}")
         return 0
-    warnings = check(rows, baseline) + check_spec_steps(rows)
+    try:
+        with open(KNEE_BASELINE) as f:
+            knee_base = json.load(f)
+    except (OSError, ValueError):
+        knee_base = {}
+    warnings = (check(rows, baseline) + check_spec_steps(rows)
+                + check_knee(rows, knee_base))
     for w in warnings:
         print(f"::warning::{w}")
     if not warnings:

@@ -84,6 +84,7 @@ def greedy_admit(
     memo_rho: Optional[np.ndarray] = None,
     model_delay: float = 0.0,
     spec_costs: Optional[np.ndarray] = None,
+    shed_penalty: float = 0.0,
 ) -> AdmissionResult:
     """Reference greedy: scoring dispatches (one per k_max chunk) + numpy
     re-pack PER admission iteration.  Semantics oracle for ``fused_admit``;
@@ -105,7 +106,10 @@ def greedy_admit(
 
     ``spec_costs`` (len(hyps),) is the slot-marginal model-step cost of each
     candidate's speculative MODEL step (see scoring.score_beam); None means
-    zeros (bit-identical no-op)."""
+    zeros (bit-identical no-op).
+
+    ``shed_penalty`` is the scalar load-shedding ΔO tax under open-loop
+    backlog (see scoring.score_beam); 0 is a bit-identical no-op."""
     limit = np.minimum(slack, budget)
     admitted: List[BranchHypothesis] = []
     admitted_demand = np.zeros(RESOURCE_DIMS)
@@ -126,6 +130,7 @@ def greedy_admit(
             memo_rho=None if memo_rho is None else memo_rho[rows],
             model_delay=model_delay,
             spec_costs=None if spec_costs is None else spec_costs[rows],
+            shed_penalty=shed_penalty,
         )
         if w_by_hid is not None:
             eu = eu * np.array([w_by_hid[h.hid] for h in remaining])
@@ -172,7 +177,8 @@ def bucket_k(n: int, k_max: int) -> int:
 
 
 def admission_signature(hids, slack, budget, auth_rho, weights, memo_masks,
-                        memo_rho, model_delay, spec_costs=None) -> tuple:
+                        memo_rho, model_delay, spec_costs=None,
+                        shed_penalty=0.0) -> tuple:
     """Byte-exact signature of every input one shared-admission pass is a
     function of.  ``greedy_admit``/``fused_admit`` are deterministic in
     (candidate hypotheses, slack, budget, conditioning demand, fairness
@@ -191,6 +197,7 @@ def admission_signature(hids, slack, budget, auth_rho, weights, memo_masks,
         None if memo_rho is None else memo_rho.tobytes(),
         float(model_delay),
         None if spec_costs is None else spec_costs.tobytes(),
+        float(shed_penalty),
     )
 
 
@@ -198,7 +205,7 @@ def admission_signature(hids, slack, budget, auth_rho, weights, memo_masks,
 def admit_beam(
     node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid,
     w, memo_mask, auth_rho, cap, limit, lam, mu, idle_window, model_delay,
-    spec_cost, n_nodes: int,
+    spec_cost, shed_penalty, n_nodes: int,
 ):
     """Entire greedy admission pass as ONE jitted kernel.
 
@@ -231,13 +238,17 @@ def admit_beam(
     operation order as every other admission path so zeros stay an
     IEEE-exact no-op and decisions stay equivalence-testable.
 
+    ``shed_penalty`` (traced scalar) is the load-shedding ΔO tax under
+    open-loop backlog (scoring.score_beam) — loop-invariant, folded at the
+    same point as ``spec_cost`` in every path; 0 is an IEEE-exact no-op.
+
     Returns (admitted_mask (K,), eu_at_admit (K,), admitted_demand (R,)).
     """
     l_solo, l_exec, delta_o, delta_u = static_gain_terms(
         node_lat, node_prob, node_mask, prefix_mask, adj, idle_window,
         n_nodes, memo_mask=memo_mask, model_delay=model_delay,
     )
-    delta_o = delta_o - mu * spec_cost
+    delta_o = delta_o - mu * spec_cost - shed_penalty
     fit_lim = _fit_limit(limit)
     K = q.shape[0]
 
@@ -276,6 +287,7 @@ def admit_beam(
 def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
                  idle_window, w=None, memo_mask=None,
                  rho=None, model_delay=0.0, spec_cost=None,
+                 shed_penalty=0.0,
                  static_terms=None) -> Tuple[np.ndarray, np.ndarray]:
     """The ``admit_beam`` algorithm on the same PackedBeam tables in pure
     numpy — the host-side fast path for tiny beams, where a single XLA
@@ -334,10 +346,13 @@ def _admit_numpy(packed: PackedBeam, auth_rho, cap, limit, lam, mu,
         # slot-marginal model-step cost — same point and operation order as
         # score_beam/admit_beam so zeros are an IEEE-exact no-op
         delta_o = delta_o - mu * spec_cost
+    # load-shedding ΔO tax — folded at the same point as the jitted paths
+    # ((ΔO − μ·spec) − shed); subtracting the 0.0 default is IEEE-exact
+    delta_o = delta_o - shed_penalty
     # Second prune: ΔI ≥ 0 only ever subtracts, so q·(ΔO+λΔU)·k_valid·w
     # is a static per-row EU ceiling — rows at/below 0 can never clear the
-    # eu > 0 eligibility bar.  (spec_cost is already folded into ΔO above,
-    # so the ceiling remains valid.)
+    # eu > 0 eligibility bar.  (spec_cost and shed_penalty are already
+    # folded into ΔO above, so the ceiling remains valid.)
     static_gain = delta_o + lam * delta_u
     pos = np.flatnonzero(q * static_gain * k_valid * w > 0.0)
     if not len(pos):
@@ -442,6 +457,7 @@ def fused_admit(
     memo_rho: Optional[np.ndarray] = None,
     model_delay: float = 0.0,
     spec_costs: Optional[np.ndarray] = None,
+    shed_penalty: float = 0.0,
     static_cache: Optional[dict] = None,
 ) -> AdmissionResult:
     """Greedy admission via the fused ``admit_beam`` kernel: one XLA dispatch
@@ -462,6 +478,8 @@ def fused_admit(
     batch window moves.  ``spec_costs`` (len(hyps),) is the slot-marginal
     model-step cost term (scoring.score_beam), riding alongside for the
     same reason; None means zeros, a bit-identical no-op.
+    ``shed_penalty`` is the scalar load-shedding ΔO tax (scoring.score_beam)
+    — another alongside-rider (a traced scalar); 0 is a bit-identical no-op.
     ``static_cache`` (caller-owned {hid: raw terms},
     host path only) replays hypothesis-intrinsic static gain terms across
     passes — see ``_cached_static_terms``."""
@@ -494,7 +512,7 @@ def fused_admit(
             packed, np.asarray(authoritative_rho, float), cap,
             np.asarray(limit, float), scorer.lam, scorer.mu, idle_window,
             w=w_pad, memo_mask=mm_pad, rho=rho, model_delay=model_delay,
-            spec_cost=sc_pad,
+            spec_cost=sc_pad, shed_penalty=shed_penalty,
             static_terms=static_terms,
         )
     else:
@@ -504,7 +522,7 @@ def fused_admit(
             jnp.asarray(w_pad), jnp.asarray(mm_pad),
             jnp.asarray(authoritative_rho),
             jnp.asarray(cap), jnp.asarray(limit), scorer.lam, scorer.mu,
-            idle_window, model_delay, jnp.asarray(sc_pad),
+            idle_window, model_delay, jnp.asarray(sc_pad), shed_penalty,
             n_nodes=scorer.n_max,
         )
         admitted_mask = np.asarray(admitted_mask)

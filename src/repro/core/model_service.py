@@ -244,15 +244,28 @@ class ModelStepService:
 
     def _window_len(self) -> float:
         """Admission-window length for the batch being opened NOW.  Fixed
-        ``linger`` unless ``adaptive``: when batchable submits are trickling
-        (EMA inter-arrival gap exceeds the window) a second member is
-        unlikely to arrive in time, so the window shrinks proportionally —
-        the linger tax is only worth paying when coalescing is likely."""
+        ``linger`` unless ``adaptive``, which is load-aware in three
+        regimes keyed on the EMA inter-arrival gap of batchable submits:
+
+        * dense (gap ≤ linger): arrivals land inside the fixed window —
+          keep it (restoration under burst fill falls out of the EMA
+          pulling back down).
+        * moderate (linger < gap ≤ 2·linger): the expected next arrival
+          lands just PAST the fixed window — every batch would dispatch
+          solo having paid the full linger tax for nothing.  Stretch to
+          1.25× the expected gap (capped at 2·linger) so the window
+          actually catches the next tenant: this is what buys batch
+          occupancy at low open-loop rates.
+        * trickle (gap > 2·linger): coalescing is a lost cause — shrink
+          proportionally and stop paying the admission tax."""
         if not self.adaptive or not self._ema_gap or self._ema_gap <= 0.0:
             return self.linger
-        if self._ema_gap <= self.linger:
+        g = self._ema_gap
+        if g <= self.linger:
             return self.linger
-        return max(self.linger * (self.linger / self._ema_gap), 1e-9)
+        if g <= 2.0 * self.linger:
+            return min(1.25 * g, 2.0 * self.linger)
+        return max(self.linger * (self.linger / g), 1e-9)
 
     def _dispatch_forming(self) -> None:
         batch, self._forming = self._forming, []

@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -301,10 +301,27 @@ class RuntimeConfig:
     adaptive_linger: bool = False     # load-aware batch admission window:
                                       # when batchable submits are trickling
                                       # (EMA inter-arrival gap > linger) the
-                                      # window shrinks proportionally — the
-                                      # linger tax is only paid when
-                                      # coalescing is likely.  Default off =
-                                      # fixed-linger path untouched.
+                                      # window shrinks proportionally, and in
+                                      # the moderate regime (gap just past
+                                      # the window) it stretches toward the
+                                      # expected next arrival — the linger
+                                      # tax is paid exactly where coalescing
+                                      # is likely.  Default off = fixed-
+                                      # linger path untouched.
+    shed_alpha: float = 0.0           # load-shedding admission (open-loop
+                                      # overload ladder): every candidate's
+                                      # ΔO is taxed shed_alpha × the arrival
+                                      # backlog (arrived-but-unlaunched
+                                      # tenants), so the lowest-EU
+                                      # speculation sheds first and at deep
+                                      # overload the beam prices itself out
+                                      # entirely — idle slack is left for
+                                      # the queued authoritative work.  The
+                                      # scalar threads through every
+                                      # admission path at the same point as
+                                      # model_delay/spec_costs and enters
+                                      # the warm-start signature.  0 = off
+                                      # (bit-identical, closed-loop pins).
     # ---- speculation-safety analysis (core/analysis.py) ----------------
     analysis: str = "warn"        # construction-time static pass (R1-R3)
                                   # over (policy, tool table, patterns):
@@ -432,6 +449,14 @@ class Metrics:
     # event≡dense and pinned-metric comparisons are unaffected.
     sanitize_findings: int = 0
     race_masked: int = 0
+    # load-shedding admission (RuntimeConfig.shed_alpha): admission passes
+    # that ran with a nonzero shed tax, the worst arrival backlog behind
+    # one, and the candidates priced out while it was active — the ladder's
+    # "speculation sheds first" evidence (all 0 with the knob off, so the
+    # closed-loop pinned comparisons are unaffected)
+    shed_passes: int = 0
+    shed_peak_backlog: int = 0
+    shed_rejections: int = 0
 
     def summary(self) -> Dict[str, float]:
         lat = np.array(self.episode_latencies) if self.episode_latencies else np.zeros(1)
@@ -515,6 +540,9 @@ class Metrics:
             ),
             "sanitize_findings": self.sanitize_findings,
             "race_masked": self.race_masked,
+            "shed_passes": self.shed_passes,
+            "shed_peak_backlog": self.shed_peak_backlog,
+            "shed_rejections": self.shed_rejections,
         }
 
     def per_tenant(self) -> Dict[int, Dict[str, float]]:
@@ -548,6 +576,7 @@ class BPasteRuntime:
         policy: EligibilityPolicy = FULL_POLICY,
         rcfg: Optional[RuntimeConfig] = None,
         tools: Dict[str, ToolSpec] = DEFAULT_TOOLS,
+        episode_source: Optional[Iterator[Episode]] = None,
     ):
         if machine is None:
             machine = Machine()
@@ -654,9 +683,17 @@ class BPasteRuntime:
         # hypotheses immutable — so like _pack_rows it is only size-bounded.
         self._static_rows: Dict[int, Tuple] = {}
         self._arrival_timer: Optional[SimJob] = None
+        # open-loop episode source: a lazy iterator of Episodes with
+        # nondecreasing arrivals (workload.open_loop_source) drained into
+        # the roster mid-run — the runtime admits tenants as they ARRIVE
+        # instead of from a frozen list.  None (the default) is the frozen
+        # closed-loop roster, bit-identical to the pre-source code.
+        self._source: Optional[Iterator[Episode]] = (
+            iter(episode_source) if episode_source is not None else None)
         self.sim = Simulator(machine, self._tick,
                              record_log=rcfg.record_log,
                              recorder=rcfg.trace)
+        self.sim.drain_probe = self._drain_pending
         # batched model-step service: owns the model-step queue (the sole
         # authoritative path on an accel-bound edge box).  max_batch=1 is a
         # synchronous pass-through, bit-identical to spawning solo jobs here.
@@ -722,7 +759,39 @@ class BPasteRuntime:
         if i is not None:
             self._mark_dirty(self.episodes[i])
 
+    def _pump_source(self):
+        """Drain the open-loop episode source of every episode that has
+        ARRIVED, plus one future head for the arrival timer to park on.
+        Arrivals are nondecreasing, so the newest materialized episode
+        having a future arrival means every still-lazy one does too — the
+        roster then holds the complete arrived-but-unlaunched backlog
+        (the load-shedding signal) at all times."""
+        while self._source is not None:
+            if (self._wave_ptr < len(self.episodes)
+                    and self.episodes[-1].ep.arrival > self.sim.now + 1e-9):
+                break
+            ep = next(self._source, None)
+            if ep is None:
+                self._source = None
+                break
+            es = EpisodeState(ep, AgentState())
+            es.idx = len(self.episodes)
+            self.episodes.append(es)
+            self._eid2idx[ep.eid] = es.idx
+
+    def _arrival_backlog(self) -> int:
+        """Arrived-but-unlaunched tenants — the overload pressure the
+        shedding ladder keys on.  Episodes are in arrival order, so the
+        count is a prefix scan from the wave pointer."""
+        n = 0
+        for i in range(self._wave_ptr, len(self.episodes)):
+            if self.episodes[i].ep.arrival > self.sim.now + 1e-9:
+                break
+            n += 1
+        return n
+
     def _launch_wave(self):
+        self._pump_source()
         # incremental serving count (clamped: unit tests drive episodes
         # through _finish_action without ever launching them here)
         active = max(self._n_serving, 0)
@@ -742,6 +811,18 @@ class BPasteRuntime:
             self._mark_dirty(es)
             self._start_model_step(es)
             active += 1
+        else:
+            # open-loop serving at capacity: keep the arrival timer armed on
+            # the next FUTURE arrival anyway, so the source keeps
+            # materializing (and the backlog signal stays fresh) while every
+            # slot is busy.  Closed-loop rosters (no source) take the legacy
+            # quiet path — no extra timer jobs, bit-identical schedules.
+            if self._source is not None:
+                for i in range(self._wave_ptr, len(self.episodes)):
+                    arrival = self.episodes[i].ep.arrival
+                    if arrival > self.sim.now + 1e-9:
+                        self._schedule_arrival(arrival)
+                        break
 
     def _schedule_arrival(self, t: float):
         """Zero-demand wake-up timer for the next pending tenant arrival —
@@ -1159,6 +1240,19 @@ class BPasteRuntime:
         if best is None:
             return None
         return best[1], best[2], best[3]
+
+    def _drain_pending(self) -> bool:
+        """``Simulator.run`` drain probe: True while some episode holds a
+        pending authoritative action that only the next tick's phase 1 can
+        dispatch.  A completion cascade can strand one with an EMPTY event
+        queue — an instant store-serve chains into a validate-on-arrival
+        spec-step acceptance, whose reasoning completes at the same
+        timestamp without ever creating a sim job — so quiescence must be
+        judged against this parked work, not just the queue."""
+        if self._event:
+            return bool(self._acting)
+        return any(es.phase == "acting" and es.pending_action is not None
+                   for es in self.episodes)
 
     def _phase1(self):
         """Confirm / promote (Algorithm 1 phase 1): match each episode's
@@ -2057,6 +2151,22 @@ class BPasteRuntime:
                            for hr in cand])
             if np.any(sc):
                 spec_costs = sc
+        # load-shedding tax (open-loop overload ladder): arrived-but-
+        # unlaunched tenants are about to claim the idle window every
+        # candidate's ΔO counts on, so the whole beam is taxed
+        # shed_alpha × backlog — the lowest-EU speculation sheds first,
+        # and past the knee the beam prices itself out entirely before any
+        # authoritative work queues behind speculative demand.  0.0 when
+        # the knob is off or nothing is queued: an IEEE-exact no-op in all
+        # three kernels, so closed-loop schedules are bit-identical.
+        shed_penalty = 0.0
+        if self.rcfg.shed_alpha > 0:
+            backlog = self._arrival_backlog()
+            if backlog:
+                shed_penalty = self.rcfg.shed_alpha * backlog
+                self.metrics.shed_passes += 1
+                self.metrics.shed_peak_backlog = max(
+                    self.metrics.shed_peak_backlog, backlog)
         # Verified admission warm-start: the greedy/fused kernels are
         # deterministic functions of exactly the inputs signed below (see
         # admission_signature), so when nothing a decision depends on moved
@@ -2069,7 +2179,7 @@ class BPasteRuntime:
             sig = admission_signature(
                 (hr.hyp.hid for hr in cand), slack, budget, auth_rho,
                 weights, memo_masks, memo_rho, model_delay,
-                spec_costs=spec_costs)
+                spec_costs=spec_costs, shed_penalty=shed_penalty)
         if (sig is not None and self._warm_admitted is not None
                 and sig == self._warm_sig):
             t0 = time.perf_counter()
@@ -2099,6 +2209,7 @@ class BPasteRuntime:
                 idle_window=self.rcfg.idle_window, weights=weights,
                 memo_masks=memo_masks, memo_rho=memo_rho,
                 model_delay=model_delay, spec_costs=spec_costs,
+                shed_penalty=shed_penalty,
             )
         else:
             if len(self._static_rows) > 8192:
@@ -2109,12 +2220,18 @@ class BPasteRuntime:
                 packed=self._packed_for(cand), weights=weights,
                 memo_masks=memo_masks, memo_rho=memo_rho,
                 model_delay=model_delay, spec_costs=spec_costs,
+                shed_penalty=shed_penalty,
                 small_beam_threshold=self.rcfg.host_admit_max,
                 static_cache=self._static_rows if self.rcfg.warm_admit
                 else None,
             )
         self.metrics.sched_admit_seconds += time.perf_counter() - t0
         self.metrics.sched_admit_calls += 1
+        if shed_penalty > 0:
+            # candidates priced out while the shed tax was active — the
+            # graceful-degradation evidence trail (upper bound: capacity
+            # rejections during overload are exactly the ladder working)
+            self.metrics.shed_rejections += len(res.rejected)
         admitted_ids = {h.hid: res.eu[h.hid] for h in res.admitted}
         if sig is not None:
             self._warm_sig = sig
@@ -2480,10 +2597,17 @@ def run_mode(
     machine: Optional[Machine] = None,
     policy: EligibilityPolicy = FULL_POLICY,
     seed: int = 0,
+    episode_source: Optional[Iterator[Episode]] = None,
     **kw,
 ) -> Metrics:
+    """``episode_source`` switches the run to OPEN-LOOP serving: episodes
+    come from the lazy iterator (nondecreasing arrivals, e.g.
+    ``workload.open_loop_source``) as they arrive, and ``episodes`` is then
+    usually the empty seed roster.  None keeps the frozen closed-loop
+    roster semantics bit-identical."""
     rcfg = RuntimeConfig(mode=mode, seed=seed, **kw)
     if machine is None:
         machine = Machine()
-    rt = BPasteRuntime(episodes, engine, machine, policy, rcfg)
+    rt = BPasteRuntime(episodes, engine, machine, policy, rcfg,
+                       episode_source=episode_source)
     return rt.run()

@@ -301,7 +301,7 @@ def eu_given_admitted(l_exec, delta_o, delta_u, q, rho, k_valid,
 def score_beam(
     node_lat, node_prob, node_mask, prefix_mask, adj, q, rho, k_valid,
     memo_mask, admitted_rho, cap, lam, mu, idle_window, model_delay,
-    spec_cost, n_nodes: int,
+    spec_cost, shed_penalty, n_nodes: int,
 ):
     """Vectorized EU for every hypothesis given the admitted demand.
 
@@ -315,13 +315,21 @@ def score_beam(
     have to open a new batch.  It enters the objective as an interference
     term (μ-scaled, subtracted from the gain) BEFORE ΔI — zeros are an
     IEEE-exact no-op, keeping non-speculative scoring bit-identical.
+    ``shed_penalty`` (traced scalar ≥ 0) is the load-shedding tax under
+    open-loop overload: arrived-but-unlaunched tenants will claim the idle
+    window the candidate's ΔO counts on, so every candidate's overlap gain
+    is discounted by the backlog pressure — the lowest-EU speculation sheds
+    first, and at high load the whole beam prices itself out before any
+    authoritative work queues behind it.  Folded at the SAME point as
+    ``spec_cost`` in every admission path; 0 (closed loop / shedding off)
+    is an IEEE-exact no-op.
 
     Returns (eu (K,), delta_o, delta_u, delta_i)."""
     l_solo, l_exec, delta_o, delta_u = static_gain_terms(
         node_lat, node_prob, node_mask, prefix_mask, adj, idle_window,
         n_nodes, memo_mask=memo_mask, model_delay=model_delay,
     )
-    delta_o = delta_o - mu * spec_cost
+    delta_o = delta_o - mu * spec_cost - shed_penalty
     eu, delta_i = eu_given_admitted(
         l_exec, delta_o, delta_u, q, rho, k_valid, admitted_rho, cap,
         lam, mu, idle_window,
@@ -369,6 +377,7 @@ class Scorer:
         memo_rho: Optional[np.ndarray] = None,
         model_delay: float = 0.0,
         spec_costs: Optional[np.ndarray] = None,
+        shed_penalty: float = 0.0,
     ) -> Tuple[np.ndarray, PackedBeam, dict]:
         """``memo_masks`` (len(hyps), N) / ``memo_rho`` (len(hyps), R) carry
         the store-reuse term: per-node memoized flags and the matching
@@ -378,7 +387,9 @@ class Scorer:
         is the model-step service's expected unlock delay (a traced scalar:
         it changes every tick without recompiling).  ``spec_costs``
         (len(hyps),) is the per-hypothesis slot-marginal model-step cost
-        (see ``score_beam``); None means zeros (bit-identical no-op)."""
+        (see ``score_beam``); None means zeros (bit-identical no-op).
+        ``shed_penalty`` is the scalar load-shedding ΔO tax (see
+        ``score_beam``); 0 (the default) is a bit-identical no-op."""
         pb = pack_beam(hyps, self.k_max, self.n_max)
         K = pb.q.shape[0]
         mm = np.zeros((K, self.n_max))
@@ -396,7 +407,7 @@ class Scorer:
             pb.q, rho, pb.k_valid, jnp.asarray(mm),
             jnp.asarray(admitted_rho), jnp.asarray(self.machine.cap_array()),
             self.lam, self.mu, idle_window, model_delay, jnp.asarray(sc),
-            n_nodes=self.n_max,
+            shed_penalty, n_nodes=self.n_max,
         )
         detail = {
             "delta_o": np.asarray(do), "delta_u": np.asarray(du),
@@ -413,6 +424,7 @@ class Scorer:
         memo_rho: Optional[np.ndarray] = None,
         model_delay: float = 0.0,
         spec_costs: Optional[np.ndarray] = None,
+        shed_penalty: float = 0.0,
     ) -> np.ndarray:
         """EU for EVERY hypothesis, chunked over ``k_max``-sized beams.
 
@@ -434,6 +446,7 @@ class Scorer:
                 model_delay=model_delay,
                 spec_costs=None if spec_costs is None
                 else spec_costs[i:i + self.k_max],
+                shed_penalty=shed_penalty,
             )
             out.append(eu[: len(chunk)])
         return np.concatenate(out)

@@ -109,6 +109,10 @@ class Simulator:
         # {"start","finish","preempt","cancel"} — trace.GanttRecorder plugs
         # in here for the opt-in full timeline dump
         self.recorder = recorder
+        # optional consumer hook for run(): () -> bool, True while the tick
+        # callback still holds parked work that needs another tick pass even
+        # though the event queue is empty (see the drain loop in run())
+        self.drain_probe: Optional[Callable[[], bool]] = None
 
         # ---- event-queue core state --------------------------------------
         self._heap: List[tuple] = []          # (t_proj, entry_seq, jid)
@@ -378,7 +382,19 @@ class Simulator:
                 self.truncated = "max_steps"
                 break
             if not self.step():
-                break
+                # Queue empty — but a completion cascade can park new work
+                # with no event left to carry it (e.g. an instant
+                # store-serve chained into a validate-on-arrival spec-step
+                # acceptance leaves a pending action that only the NEXT
+                # tick dispatches, and that dispatch can itself resolve
+                # instantly and park another).  Grant drain ticks while the
+                # consumer's ``drain_probe`` reports parked work — each
+                # tick consumes it, so this terminates — and exit the
+                # moment nothing is runnable and nothing is parked, so
+                # ordinary runs keep their exact tick count.
+                if not (self.drain_probe is not None
+                        and self.drain_probe()):
+                    break
             self.tick(self)
             steps += 1
         if self.truncated is not None and not self.running:

@@ -27,7 +27,7 @@ model_service.py (per-step ``batchable`` metadata).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -201,12 +201,26 @@ class WorkloadConfig:
                                   # private (legacy, draw-for-draw: no rng
                                   # draw is taken when off)
     shared_pool: int = 4          # number of distinct shared subjects
+    open_loop_rate: float = 0.0   # offered load (episodes/sec) for OPEN-LOOP
+                                  # serving: every episode (including eid 0)
+                                  # arrives after an additional exponential
+                                  # gap with mean 1/rate, independent of how
+                                  # fast the box drains.  Composes with
+                                  # arrival_stagger (gaps add).  0 = closed
+                                  # loop (legacy, draw-for-draw: no rng draw
+                                  # is taken when off)
 
 
-def make_episodes(cfg: WorkloadConfig) -> List[Episode]:
+def open_loop_source(cfg: WorkloadConfig) -> Iterator[Episode]:
+    """Lazy episode stream with nondecreasing arrivals.
+
+    ``list(open_loop_source(cfg)) == make_episodes(cfg)`` draw-for-draw:
+    the runtime can pull episodes one at a time mid-run (open-loop serving)
+    while tests and closed-loop callers materialise the identical roster
+    up front.  Arrival gaps are drawn AFTER each episode's own draws so
+    every legacy stream reproduces exactly when both knobs are off."""
     rng = np.random.default_rng(cfg.seed)
     kinds, probs = zip(*cfg.mix, strict=True)
-    episodes = []
     t_arrive = 0.0
     for eid in range(cfg.n_episodes):
         kind = str(rng.choice(kinds, p=np.array(probs) / sum(probs)))
@@ -227,8 +241,17 @@ def make_episodes(cfg: WorkloadConfig) -> List[Episode]:
         # legacy stream draw-for-draw (no draw is taken when off)
         if cfg.arrival_stagger > 0 and eid > 0:
             t_arrive += float(rng.exponential(cfg.arrival_stagger))
-        episodes.append(Episode(eid, kind, steps, arrival=t_arrive))
-    return episodes
+        # open-loop offered load: an independent exponential inter-arrival
+        # with mean 1/rate, charged to EVERY episode (the first tenant of a
+        # sustained stream does not arrive at t=0).  Gaps add on top of any
+        # stagger so the two processes compose.
+        if cfg.open_loop_rate > 0:
+            t_arrive += float(rng.exponential(1.0 / cfg.open_loop_rate))
+        yield Episode(eid, kind, steps, arrival=t_arrive)
+
+
+def make_episodes(cfg: WorkloadConfig) -> List[Episode]:
+    return list(open_loop_source(cfg))
 
 
 def episodes_to_traces(episodes: Sequence[Episode]) -> List[List[Event]]:

@@ -691,3 +691,103 @@ def test_spec_costs_change_admission_signature():
         (1, 2), slack, budget, auth, w, None, None, 0.0,
         spec_costs=np.array([1.0, 0.0]))
     assert base != with_costs
+
+
+# ======================================================================
+# Load-shed penalty (backlog-proportional ΔO tax under open-loop load)
+# ======================================================================
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("k", [3, 6])
+def test_shed_penalty_fused_matches_reference(seed, k):
+    """The backlog shed tax threads identically through the fused kernel
+    and the reference greedy."""
+    rng = np.random.default_rng(1000 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_tree_hyp(h, rng) for h in range(k)]
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    shed = float(rng.uniform(0.2, 3.0))
+    ref = admission.greedy_admit(hyps, sc, slack, budget, auth,
+                                 shed_penalty=shed)
+    fus = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                shed_penalty=shed)
+    _assert_equivalent(ref, fus, hyps)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_shed_penalty_numpy_path_matches_kernel(seed):
+    rng = np.random.default_rng(1100 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_tree_hyp(h, rng) for h in range(5)]
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    via_np = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                   shed_penalty=1.3,
+                                   small_beam_threshold=len(hyps))
+    via_krn = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                    shed_penalty=1.3,
+                                    small_beam_threshold=0)
+    _assert_equivalent(via_np, via_krn, hyps)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_shed_penalty_composes_with_other_per_tick_terms(seed):
+    """All three per-tick terms at once — queue delay (ΔU), slot-marginal
+    spec cost (ΔO, per branch) and the shed tax (ΔO, uniform) — must not
+    interfere across the reference and fused paths."""
+    rng = np.random.default_rng(1200 + seed)
+    sc = scoring.Scorer(Machine())
+    hyps = [_mk_tree_hyp(h, rng) for h in range(6)]
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = rng.uniform(0.0, 2.0, RESOURCE_DIMS)
+    costs = _spec_costs_for(hyps, rng)
+    ref = admission.greedy_admit(hyps, sc, slack, budget, auth,
+                                 model_delay=1.7, spec_costs=costs,
+                                 shed_penalty=0.9)
+    fus = admission.fused_admit(hyps, sc, slack, budget, auth,
+                                model_delay=1.7, spec_costs=costs,
+                                shed_penalty=0.9)
+    _assert_equivalent(ref, fus, hyps)
+
+
+def test_shed_penalty_discounts_delta_o_only():
+    """A growing shed tax strictly shrinks the EU (through ΔO) and never
+    touches ΔU; an explicit zero tax is bit-identical to the no-tax call
+    (the runtime's zero-backlog fast path relies on it)."""
+    sc = scoring.Scorer(Machine())
+    rng = np.random.default_rng(6)
+    ht = _mk_tree_hyp(1, rng, q=0.8)
+    base, _, d0 = sc.score([ht], np.zeros(4), idle_window=8.0)
+    zero, _, dz = sc.score([ht], np.zeros(4), idle_window=8.0,
+                           shed_penalty=0.0)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(zero))
+    np.testing.assert_array_equal(np.asarray(d0["delta_o"]),
+                                  np.asarray(dz["delta_o"]))
+    prev_eu = float(np.asarray(base)[0])
+    for shed in (0.5, 1.5, 4.0):
+        eu, _, d = sc.score([ht], np.zeros(4), idle_window=8.0,
+                            shed_penalty=shed)
+        assert float(np.asarray(eu)[0]) < prev_eu
+        np.testing.assert_allclose(d["delta_u"][0], d0["delta_u"][0],
+                                   rtol=1e-6)
+        prev_eu = float(np.asarray(eu)[0])
+
+
+def test_shed_penalty_changes_admission_signature():
+    """The warm-start signature must distinguish shed levels — the
+    backlog moves between ticks, so replaying an admitted set computed
+    under a different tax would be stale."""
+    slack = np.array([5.7, 41.0, 180.0, 1.0])
+    budget = np.array([4.3, 33.0, 150.0, 1.0])
+    auth = np.zeros(RESOURCE_DIMS)
+    w = np.ones(2)
+    base = admission.admission_signature(
+        (1, 2), slack, budget, auth, w, None, None, 0.0)
+    with_shed = admission.admission_signature(
+        (1, 2), slack, budget, auth, w, None, None, 0.0,
+        shed_penalty=0.7)
+    assert base != with_shed

@@ -41,7 +41,9 @@ from repro.core.mining.prefixspan import conditional_next, prefixspan
 from repro.core.patterns import PatternEngine
 from repro.core.safety import EligibilityPolicy, FULL_POLICY, READ_ONLY_POLICY
 from repro.core.sandbox import AgentState, Sandbox
-from repro.core.workload import WorkloadConfig, episodes_to_traces, make_episodes
+from repro.core.workload import (
+    WorkloadConfig, episodes_to_traces, make_episodes, open_loop_source,
+)
 
 
 # ======================================================================
@@ -502,3 +504,80 @@ def test_safe_prefix_is_per_branch_frontier():
     ids = {n.idx for n in h.safe_prefix()}
     assert ids == {0, 2}          # sibling parse survives; edit subtree bounded
     assert h.path_to(3) == [0, 1, 3]
+
+
+# ======================================================================
+# Open-loop arrival process (workload.open_loop_source)
+# ======================================================================
+
+def _arrival_cfg(seed, n, stagger=0.0, rate=0.0):
+    return WorkloadConfig(seed=seed, n_episodes=n,
+                          arrival_stagger=stagger, open_loop_rate=rate)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.floats(0.0, 8.0),
+       st.floats(0.0, 4.0),
+       st.integers(1, 12))
+def test_open_loop_arrivals_seeded_deterministic(seed, stagger, rate, n):
+    """The arrival process is a pure function of the config: two fresh
+    pulls of the lazy source agree episode-for-episode (eid, kind, step
+    count, arrival), and the materialised roster is the same stream."""
+    def key(e):
+        return (e.eid, e.kind, len(e.steps), e.arrival)
+
+    cfg = _arrival_cfg(seed, n, stagger, rate)
+    a = list(open_loop_source(cfg))
+    b = list(open_loop_source(cfg))
+    assert [key(e) for e in a] == [key(e) for e in b]
+    assert [key(e) for e in make_episodes(cfg)] == [key(e) for e in a]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.floats(0.0, 8.0),
+       st.floats(0.0, 4.0),
+       st.integers(1, 16))
+def test_open_loop_arrivals_monotone(seed, stagger, rate, n):
+    """Arrivals are nondecreasing in eid (the lazy source's contract: the
+    runtime may stop pumping at the first future arrival), and both knobs
+    off keeps every tenant at t=0 (the legacy closed-loop roster)."""
+    arr = [e.arrival for e in open_loop_source(_arrival_cfg(
+        seed, n, stagger, rate))]
+    assert all(b >= a for a, b in zip(arr, arr[1:], strict=False))
+    assert all(a >= 0.0 for a in arr)
+    if stagger == 0.0 and rate == 0.0:
+        assert arr == [0.0] * n
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([0.5, 1.0, 4.0]))
+def test_open_loop_mean_interarrival_matches_rate(seed, rate):
+    """Offered load calibrates: with stagger off, inter-arrival gaps are
+    iid Exp(1/rate), so the sample mean lands within 4 standard errors of
+    1/rate (gap 0 is eid 0's own draw — every episode is charged)."""
+    n = 500
+    arr = [e.arrival for e in open_loop_source(_arrival_cfg(
+        seed, n, rate=rate))]
+    gaps = np.diff([0.0] + arr)
+    assert np.all(gaps >= 0.0)
+    assert abs(float(np.mean(gaps)) * rate - 1.0) < 4.0 / np.sqrt(n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_open_loop_stagger_rate_compose_additively(seed):
+    """stagger and open_loop_rate compose as independent additive delays:
+    eid>0 gaps average stagger + 1/rate, while eid 0 is charged only the
+    open-loop draw (stagger never delays the first tenant)."""
+    stagger, rate, n = 2.0, 1.0, 500
+    arr = [e.arrival for e in open_loop_source(_arrival_cfg(
+        seed, n, stagger, rate))]
+    gaps = np.diff(arr)
+    want = stagger + 1.0 / rate
+    sigma = float(np.sqrt(stagger**2 + (1.0 / rate) ** 2))
+    assert abs(float(np.mean(gaps)) - want) < 4.0 * sigma / np.sqrt(n - 1)
+    # eid 0: one Exp(1/rate) draw, no stagger term -> strictly positive
+    # but far below the worst-case combined gap with overwhelming odds
+    assert arr[0] > 0.0

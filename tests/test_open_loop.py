@@ -1,0 +1,138 @@
+"""Open-loop serving (sustained-load SLO regime): lazy episode injection
+from an arrival source during ``run``, the load-shedding admission ladder
+(``shed_alpha``), closed-loop bit-identity pins under BOTH schedulers, and
+the roster-vs-source equivalence invariant."""
+import json
+import os
+
+import pytest
+
+from repro.core.interference import Machine
+from repro.core.patterns import PatternEngine
+from repro.core.runtime import run_mode
+from repro.core.workload import (
+    WorkloadConfig, episodes_to_traces, make_episodes, open_loop_source,
+)
+
+THOR = Machine()                            # accel=1 edge box
+PINNED = os.path.join(os.path.dirname(__file__), "data",
+                      "pr9_pinned_serving.json")
+# wall-clock self-measurements: the only summary keys legitimately allowed
+# to differ between bit-identical schedules
+WALL_CLOCK_KEYS = {"sched_us_per_admit", "sched_us_per_tick"}
+# the full serving stack, as swept by benchmarks/bench_serving.py
+STACK = dict(memo=True, model_max_batch=8, spec_model_steps=True,
+             shed_alpha=1.0, adaptive_linger=True)
+
+
+def _open_cfg(rate: float, n: int = 16) -> WorkloadConfig:
+    return WorkloadConfig(seed=42, n_episodes=n, open_loop_rate=rate,
+                          shared_frac=0.5, shared_pool=2)
+
+
+def _open_run(engine, rate: float, **kw):
+    merged = {**STACK, **kw}
+    return run_mode([], engine, "bpaste", THOR, seed=7,
+                    max_concurrent_episodes=4,
+                    episode_source=open_loop_source(_open_cfg(rate)),
+                    **merged)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    train = make_episodes(WorkloadConfig(seed=1, n_episodes=20))
+    return PatternEngine(context_len=2, min_support=3).fit(
+        episodes_to_traces(train))
+
+
+# ----------------------------------------------------------------------
+# closed-loop bit-identity: the open-loop knobs at zero are exact no-ops
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("scheduler", ["event", "dense"])
+def test_rate_zero_shed_off_reproduces_pinned_serving(engine, scheduler):
+    """``open_loop_rate=0`` + ``shed_alpha=0`` (both explicit) must
+    reproduce the pinned pre-feature serving summaries value-for-value
+    under BOTH schedulers: the extra workload draw, the shed fold in every
+    admission path, and the simulator's drain-tick loop are all exactly
+    inert when off."""
+    test = make_episodes(WorkloadConfig(
+        seed=42, n_episodes=8, arrival_stagger=4.0, open_loop_rate=0.0,
+        shared_frac=0.5, shared_pool=2))
+    with open(PINNED) as f:
+        pinned = json.load(f)
+    got = run_mode(test, engine, "bpaste", THOR, seed=7,
+                   max_concurrent_episodes=8, memo=True, model_max_batch=8,
+                   shed_alpha=0.0, scheduler=scheduler).summary()
+    want = pinned["bpaste_memo_thor_c8_b8"]
+    diffs = {k: (got.get(k), v) for k, v in want.items()
+             if k not in WALL_CLOCK_KEYS and got.get(k) != v}
+    assert not diffs, f"{scheduler}: {diffs}"
+    assert got["shed_passes"] == 0
+    assert got["shed_rejections"] == 0
+
+
+def test_source_with_rate_zero_matches_frozen_roster(engine):
+    """Feeding the SAME episodes through ``episode_source`` (lazy, pumped
+    mid-run, arrival timers armed by the runtime) must reproduce the
+    frozen-roster run summary-for-summary: injection changes WHEN episode
+    state materialises, never what gets scheduled."""
+    cfg = WorkloadConfig(seed=42, n_episodes=8, arrival_stagger=4.0,
+                         shared_frac=0.5, shared_pool=2)
+    kw = dict(seed=7, max_concurrent_episodes=8, memo=True,
+              model_max_batch=8)
+    roster = run_mode(make_episodes(cfg), engine, "bpaste", THOR,
+                      **kw).summary()
+    source = run_mode([], engine, "bpaste", THOR,
+                      episode_source=open_loop_source(cfg), **kw).summary()
+    assert {k: v for k, v in roster.items() if k not in WALL_CLOCK_KEYS} \
+        == {k: v for k, v in source.items() if k not in WALL_CLOCK_KEYS}
+
+
+# ----------------------------------------------------------------------
+# open-loop end-to-end invariants
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("scheduler", ["event", "dense"])
+def test_open_loop_serves_every_tenant_to_completion(engine, scheduler):
+    """Sustained arrivals at a moderate rate: every injected tenant runs
+    to completion (no stranded pending actions at quiescence — the
+    simulator drain loop's contract), the run is not truncated, and
+    authoritative work rides tax-free."""
+    m = _open_run(engine, 0.1, scheduler=scheduler)
+    s = m.summary()
+    assert len(m.tenant_sojourn) == 16
+    assert s["truncated"] == 0.0
+    assert s["mean_auth_slowdown"] == 1.0
+    assert s["qos_violations"] == 0
+
+
+def test_shed_prices_out_speculation_before_any_qos_violation(engine):
+    """The graceful-degradation ladder: past the knee the backlog tax
+    fires (shed passes with real rejections), yet authoritative QoS stays
+    untouched — speculation sheds strictly before authoritative work
+    queues behind it."""
+    s = _open_run(engine, 0.2).summary()
+    assert s["shed_passes"] > 0
+    assert s["shed_peak_backlog"] > 0
+    assert s["shed_rejections"] > 0
+    assert s["mean_auth_slowdown"] == 1.0
+    assert s["qos_violations"] == 0
+
+
+def test_shed_inert_without_backlog(engine):
+    """At a rate the box absorbs, the backlog never forms and the shed
+    term never fires — the ladder's first rung is 'do nothing'."""
+    s = _open_run(engine, 0.05).summary()
+    assert s["shed_passes"] == 0
+    assert s["shed_rejections"] == 0
+    assert s["mean_auth_slowdown"] == 1.0
+
+
+def test_adaptive_linger_improves_occupancy_under_open_loop(engine):
+    """At a low open-loop rate the adaptive window's moderate-regime
+    stretch collects more riders per dispatch: batch occupancy improves
+    over the fixed window, with every tenant still served."""
+    off = _open_run(engine, 0.1, adaptive_linger=False)
+    on = _open_run(engine, 0.1, adaptive_linger=True)
+    assert len(off.tenant_sojourn) == len(on.tenant_sojourn) == 16
+    assert on.summary()["model_batch_occupancy"] > \
+        off.summary()["model_batch_occupancy"]

@@ -138,8 +138,8 @@ def test_withdraw_and_promote_spec():
 
 def test_adaptive_linger_shrinks_window_under_trickle():
     """Fixed path returns `linger` untouched; the adaptive window shrinks
-    proportionally once the EMA inter-arrival gap exceeds it (coalescing
-    unlikely — stop paying the full admission tax)."""
+    proportionally once the EMA inter-arrival gap passes the moderate
+    regime (coalescing unlikely — stop paying the full admission tax)."""
     _, fixed, _ = _bare_service(max_batch=4, linger=1.5)
     fixed._ema_gap = 30.0                   # ignored: adaptive off
     assert fixed._window_len() == 1.5
@@ -147,10 +147,55 @@ def test_adaptive_linger_shrinks_window_under_trickle():
     assert ad._window_len() == 1.5          # no signal yet
     ad._ema_gap = 1.0                       # denser than the window: keep
     assert ad._window_len() == 1.5
-    ad._ema_gap = 3.0                       # trickle: shrink proportionally
-    np.testing.assert_allclose(ad._window_len(), 1.5 * (1.5 / 3.0))
+    ad._ema_gap = 3.5                       # trickle (> 2·linger): shrink
+    np.testing.assert_allclose(ad._window_len(), 1.5 * (1.5 / 3.5))
     ad._ema_gap = 1e9
     assert ad._window_len() >= 1e-9         # floored, never zero
+
+
+def test_adaptive_linger_stretches_window_in_moderate_regime():
+    """Arrivals landing just past the fixed window stretch it toward the
+    expected gap (capped at 2·linger): the window catches the next tenant
+    instead of dispatching solo after paying the full linger tax."""
+    _, ad, _ = _bare_service(max_batch=4, linger=1.5, adaptive=True)
+    ad._ema_gap = 2.0                       # moderate: stretch to 1.25·gap
+    np.testing.assert_allclose(ad._window_len(), 2.5)
+    ad._ema_gap = 2.9                       # cap binds at 2·linger
+    np.testing.assert_allclose(ad._window_len(), 3.0)
+    ad._ema_gap = 3.0                       # moderate edge: still capped
+    np.testing.assert_allclose(ad._window_len(), 3.0)
+    # monotone hand-off: just past the edge the trickle regime takes over
+    ad._ema_gap = 3.0 + 1e-9
+    assert ad._window_len() < 1.5
+
+
+def test_adaptive_linger_window_restores_under_burst_fill():
+    """A burst pulling the EMA gap back under the window restores the full
+    fixed linger — shrink is load-following, not a ratchet.  Driven through
+    the real EMA update (submit path), not by poking the field."""
+    sim, ad, _ = _bare_service(max_batch=8, linger=1.5, adaptive=True)
+
+    def sub(i):
+        ad.submit(ModelStepRequest(i, f"model[e{i}.0]", 2.0,
+                                   lambda s, j: None))
+
+    # trickle: two submits 40 s apart drive the EMA way past 2·linger
+    sub(0)
+    sim.run()
+    sim.now += 40.0
+    sub(1)
+    assert ad._ema_gap > 2.0 * ad.linger
+    assert ad._window_len() < ad.linger
+    sim.run()
+    # burst fill: back-to-back submits at one instant hammer the EMA with
+    # zero gaps until it drops inside the window — full linger restored
+    # (full batches fill-dispatch along the way; the EMA rides the submit
+    # path, so it keeps decaying across batch boundaries)
+    for i in range(2, 16):
+        sub(i)
+    assert ad._ema_gap <= ad.linger
+    assert ad._window_len() == ad.linger
+    sim.run()
 
 
 # ----------------------------------------------------------------------
